@@ -1,0 +1,194 @@
+"""Shared benchmark machinery: the paper's evaluation models (§5.1) and
+search-variant helpers (TOAST, manual-expert, AutoMap-like, unpruned
+random ≈ Alpa-like search-space ablation)."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.actions import Action, build_action_space, valid_actions
+from repro.core.cost_model import (CostModel, HardwareSpec, MeshSpec,
+                                   ShardingState)
+from repro.core.mcts import MCTS, MCTSConfig
+from repro.core.partitioner import (ToastArtifacts, analyze,
+                                    flatten_logical_axes)
+from repro.launch.specs import step_and_inputs
+from repro.models import gns, unet
+
+# --- the paper's models (§5.1) --------------------------------------------
+
+T2B = ModelConfig(
+    name="t2b", family="dense", num_layers=18, d_model=2048, num_heads=8,
+    num_kv_heads=1, d_ff=32768, vocab_size=256128, head_dim=256,
+    mlp="gelu", source="gemma1-2b (paper §5.1)")
+
+T7B = ModelConfig(
+    name="t7b", family="dense", num_layers=28, d_model=3072, num_heads=16,
+    num_kv_heads=16, d_ff=49152, vocab_size=256128, head_dim=256,
+    mlp="gelu", source="gemma1-7b (paper §5.1)")
+
+ITX = ModelConfig(
+    name="itx", family="dense", num_layers=32, d_model=2048, num_heads=32,
+    num_kv_heads=32, d_ff=4096, vocab_size=50257, head_dim=64,
+    mlp="gelu", source="inference transformer (paper §5.1, Pope et al.)")
+
+GNS_CFG = gns.GNSConfig()          # 875M-class graph net
+UNET_CFG = unet.UNetConfig()       # conv U-Net with attention bottleneck
+
+
+def artifacts_for(model: str, *, seq: int = 2048,
+                  batch: int = 32) -> tuple[ToastArtifacts, list]:
+    """Trace the model's train/serve step and run the NDA."""
+    if model in ("t2b", "t7b", "itx"):
+        cfg = {"t2b": T2B, "t7b": T7B, "itx": ITX}[model]
+        kind = "decode" if model == "itx" else "train"
+        shape = ShapeConfig("bench", seq, batch, kind)
+        fn, args, names = step_and_inputs(cfg, shape)
+        art = analyze(fn, args)
+        return art, flatten_logical_axes(names)
+    if model == "gns":
+        fn = gns.make_train_step(GNS_CFG)
+        specs = gns.input_specs(GNS_CFG)
+        params = jax.eval_shape(
+            lambda: gns.init_params(GNS_CFG, jax.random.PRNGKey(0)))
+        art = analyze(fn, (params, specs))
+        names = (jax.tree_util.tree_map(lambda _: None, params),
+                 {"nodes": ("nodes", None), "edges": ("edges", None),
+                  "senders": ("edges",), "receivers": ("edges",),
+                  "targets": ("nodes", None)})
+        return art, flatten_logical_axes(names)
+    if model == "unet":
+        fn = unet.make_train_step(UNET_CFG)
+        specs = unet.input_specs(UNET_CFG)
+        params = jax.eval_shape(
+            lambda: unet.init_params(UNET_CFG, jax.random.PRNGKey(0)))
+        art = analyze(fn, (params, specs))
+        names = (jax.tree_util.tree_map(lambda _: None, params),
+                 {"x": ("batch", None, None, None),
+                  "eps": ("batch", None, None, None)})
+        return art, flatten_logical_axes(names)
+    raise ValueError(model)
+
+
+# --- search variants --------------------------------------------------------
+
+
+@dataclasses.dataclass
+class VariantResult:
+    name: str
+    cost: float
+    runtime_est: float           # seconds per step (cost model)
+    peak_gb: float
+    oom: bool
+    search_s: float
+    evaluations: int
+
+
+def _input_colors(art: ToastArtifacts) -> set[int]:
+    cols = set()
+    for vid in art.prog.inputs:
+        cols.update(art.nda.colors_of_value(vid))
+    return cols
+
+
+def state_from_rules(art: ToastArtifacts, logical_axes,
+                     rules: dict[str, tuple[str, ...]],
+                     mesh: MeshSpec) -> ShardingState:
+    """Build the expert/manual sharding state from logical rules."""
+    # NOTE: unlike MCTS actions, expert rules may reuse one mesh axis for
+    # several colors (Megatron puts hidden/heads/vocab all on "model");
+    # the cost model's per-site validation handles any per-tensor clash.
+    state = ShardingState()
+    assigned: set[int] = set()
+    for vid, names in zip(art.prog.inputs, logical_axes or []):
+        if not names:
+            continue
+        cols = art.nda.colors_of_value(vid)
+        for col, name in zip(cols, names):
+            axes = rules.get(name) if name else None
+            if not axes or col in assigned:
+                continue
+            for a in axes:
+                if a not in mesh.axes:
+                    continue
+                state = state.with_action(col, a, ())
+            assigned.add(col)
+    return state
+
+
+def run_variant(name: str, art: ToastArtifacts, logical_axes,
+                mesh: MeshSpec, hw: HardwareSpec,
+                mcts_cfg: MCTSConfig | None = None,
+                min_dims: int = 10) -> VariantResult:
+    cm = CostModel(art.prog, art.nda, art.analysis, mesh, hw)
+    t0 = time.perf_counter()
+    evals = 0
+    if name == "unsharded":
+        state = ShardingState()
+    elif name == "manual":
+        from repro.models.sharding import MANUAL_RULES
+        # paper §5.1.1: GNS expert baseline = edge sharding [11] +
+        # Megatron on the latent MLPs; transformers = FSDP+Megatron+seqpar
+        rules = dict(MANUAL_RULES) | {"edges": ("data",),
+                                      "nodes": ("data",),
+                                      "latent": ("model",),
+                                      "channels": ("model",)}
+        state = state_from_rules(art, logical_axes, rules, mesh)
+    elif name == "toast":
+        actions = build_action_space(art.nda, art.analysis, mesh,
+                                     min_dims=min_dims)
+        agent = MCTS(cm, actions, mcts_cfg or MCTSConfig())
+        res = agent.search()
+        state, evals = res.best_state, res.evaluations
+    elif name == "automap":
+        # AutoMap-like: shardings only issued on function *arguments* (no
+        # intermediate conflict-resolution actions) — paper §1/§2.2.
+        allowed = _input_colors(art)
+        actions = [a for a in build_action_space(
+            art.nda, art.analysis, mesh, min_dims=min_dims)
+            if a.color in allowed]
+        actions = [Action(a.color, a.axis, ()) for a in actions]
+        seen = set()
+        uniq = []
+        for a in actions:
+            if (a.color, a.axis) not in seen:
+                seen.add((a.color, a.axis))
+                uniq.append(a)
+        agent = MCTS(cm, uniq, mcts_cfg or MCTSConfig())
+        res = agent.search()
+        state, evals = res.best_state, res.evaluations
+    elif name == "random_unpruned":
+        # Alpa-like search-space ablation: every color (min_dims=0), no
+        # compatibility grouping, random rollouts under the same budget.
+        import random
+        rng = random.Random(0)
+        actions = build_action_space(art.nda, art.analysis, mesh,
+                                     min_dims=1, max_bits_per_action=0)
+        budget = (mcts_cfg or MCTSConfig())
+        n_rolls = budget.rounds * budget.trajectories_per_round
+        best, best_cost = ShardingState(), cm.paper_cost(ShardingState())
+        for _ in range(n_rolls):
+            s = ShardingState()
+            for _ in range(rng.randint(1, 6)):
+                av = valid_actions(actions, s)
+                if not av:
+                    break
+                s = rng.choice(av).apply(s)
+            evals += 1
+            c = cm.paper_cost(s)
+            if c < best_cost:
+                best, best_cost = s, c
+        state = best
+    else:
+        raise ValueError(name)
+    search_s = time.perf_counter() - t0
+    bd = cm.evaluate(state)
+    return VariantResult(
+        name=name, cost=cm.paper_cost(state), runtime_est=bd.runtime,
+        peak_gb=bd.peak_bytes / 2**30, oom=bd.peak_bytes > hw.hbm_per_chip,
+        search_s=search_s, evaluations=evals)

@@ -1,0 +1,48 @@
+"""Assemble EXPERIMENTS.md §Dry-run table from results/dryrun/*.json.
+
+    PYTHONPATH=src python -m benchmarks.report --dir results/dryrun
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+
+def rows(dirpath, plan="manual"):
+    out = []
+    for p in sorted(pathlib.Path(dirpath).glob(f"*_{plan}.json")):
+        out.append(json.loads(p.read_text()))
+    return out
+
+
+def dryrun_table(dirpath, plan="manual"):
+    recs = rows(dirpath, plan)
+    lines = ["| arch | shape | mesh | devices | compile s | peak GiB/dev | "
+             "AR GiB/dev | AG GiB/dev | RS GiB/dev | trips |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        c = r.get("collectives", {})
+        trips = sorted(set(r.get("while_trip_counts", {}).values()))
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['num_devices']} | {r['compile_s']:.1f} | "
+            f"{r['peak_bytes_per_device']/2**30:.2f} | "
+            f"{c.get('all-reduce', 0)/2**30:.2f} | "
+            f"{c.get('all-gather', 0)/2**30:.2f} | "
+            f"{c.get('reduce-scatter', 0)/2**30:.2f} | "
+            f"{trips} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--plan", default="manual")
+    args = ap.parse_args()
+    print(dryrun_table(args.dir, args.plan))
+
+
+if __name__ == "__main__":
+    main()

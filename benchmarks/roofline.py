@@ -1,0 +1,100 @@
+"""Roofline report: turns results/dryrun/*.json into the §Roofline table.
+
+Per (arch × shape × mesh): the three roofline terms (seconds),
+the dominant bottleneck, MODEL_FLOPS = 6·N·D (train) / 2·N·D (inference,
+N_active for MoE), and the MODEL_FLOPS / HLO_FLOPs usefulness ratio.
+
+    PYTHONPATH=src python -m benchmarks.roofline --dir results/dryrun
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.core.cost_model import HardwareSpec
+
+HW = HardwareSpec()
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = cfg.num_params()
+    if cfg.num_experts:
+        moe_per_layer = cfg.num_experts * 3 * cfg.d_model * cfg.d_ff
+        n_moe_layers = len([k for k in cfg.pattern
+                            if k in ("attn", "local")])
+        dense_n = n - moe_per_layer * n_moe_layers
+        active = moe_per_layer * (cfg.experts_per_token / cfg.num_experts)
+        n = dense_n + active * n_moe_layers
+    tokens = shape.global_batch * (1 if shape.kind == "decode"
+                                   else shape.seq_len)
+    mult = 6 if shape.kind == "train" else 2
+    return mult * n * tokens
+
+
+def load(dirpath: str, plan: str = "manual"):
+    rows = []
+    for p in sorted(pathlib.Path(dirpath).glob(f"*_{plan}.json")):
+        rec = json.loads(p.read_text())
+        if rec.get("plan", "manual") != plan:
+            continue
+        mf = model_flops(rec["arch"], rec["shape"])
+        n_dev = rec["num_devices"]
+        hlo_total = rec["hlo_flops_per_device"] * n_dev
+        rec["model_flops"] = mf
+        rec["useful_ratio"] = mf / hlo_total if hlo_total else 0.0
+        terms = {"compute": rec["t_compute"], "memory": rec["t_memory"],
+                 "collective": rec["t_collective"]}
+        dom = max(terms, key=terms.get)
+        rec["bottleneck"] = dom
+        rec["t_bound"] = terms[dom]
+        # roofline fraction: ideal compute time / achievable bound
+        ideal = mf / n_dev / HW.flops_per_chip
+        rec["roofline_frac"] = ideal / max(sum(terms.values()), 1e-30)
+        rows.append(rec)
+    return rows
+
+
+def fmt_table(rows, mesh="16x16"):
+    out = ["| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | "
+           "bottleneck | peak GiB/dev | useful ratio | roofline frac |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute']:.3e} | "
+            f"{r['t_memory']:.3e} | {r['t_collective']:.3e} | "
+            f"{r['bottleneck']} | "
+            f"{r['peak_bytes_per_device']/2**30:.2f} | "
+            f"{r['useful_ratio']:.2f} | {r['roofline_frac']:.3f} |")
+    return "\n".join(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--plan", default="manual")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    rows = load(args.dir, args.plan)
+    print(fmt_table(rows, args.mesh))
+    print()
+    worst = sorted((r for r in rows if r["mesh"] == args.mesh),
+                   key=lambda r: r["roofline_frac"])[:3]
+    print("worst roofline fractions:",
+          [(r["arch"], r["shape"], round(r["roofline_frac"], 4))
+           for r in worst])
+    coll = sorted((r for r in rows if r["mesh"] == args.mesh),
+                  key=lambda r: -r["t_collective"] /
+                  max(r["t_compute"] + r["t_memory"], 1e-30))[:3]
+    print("most collective-bound:",
+          [(r["arch"], r["shape"]) for r in coll])
+
+
+if __name__ == "__main__":
+    main()

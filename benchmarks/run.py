@@ -1,0 +1,127 @@
+"""Benchmark harness — one section per paper figure/table.
+
+Prints ``name,us_per_call,derived`` CSV rows (per the repo convention).
+Hardware is the abstract TPU v5e of the roofline spec; "step time" rows
+are cost-model estimates (this container has no accelerator), search-time
+rows are real wall-clock.
+
+Sections:
+- fig8:   partitioned step-time estimates, TOAST vs unsharded / manual /
+          AutoMap-like / unpruned-random (≈ Alpa search-space), per model.
+- fig9:   auto-sharding search time (wall-clock) + cost-model evaluations.
+- fig10:  T2B sequence-length and device scaling.
+- nda:    static-analysis latency per model (scalability claim §5.3).
+- kernels: Pallas kernel microbenchmarks (interpret mode) vs jnp oracle.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core.cost_model import HardwareSpec, MeshSpec
+from repro.core.mcts import MCTSConfig
+
+MESH = MeshSpec(("data", "model"), (16, 16))
+HW = HardwareSpec()
+VARIANTS = ("unsharded", "manual", "automap", "random_unpruned", "toast")
+MODELS = ("t2b", "t7b", "gns", "unet", "itx")
+
+
+def _row(name, us, derived=""):
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def fig8_and_9(models=MODELS, budget=None):
+    budget = budget or MCTSConfig(rounds=8, trajectories_per_round=32)
+    for model in models:
+        art, names = common.artifacts_for(model)
+        for variant in VARIANTS:
+            r = common.run_variant(variant, art, names, MESH, HW,
+                                   mcts_cfg=budget)
+            _row(f"fig8.step_time.{model}.{variant}",
+                 r.runtime_est * 1e6,
+                 f"cost={r.cost:.4f};peak_gb={r.peak_gb:.2f};"
+                 f"oom={int(r.oom)}")
+            if variant in ("toast", "automap", "random_unpruned"):
+                _row(f"fig9.search_time.{model}.{variant}",
+                     r.search_s * 1e6, f"evaluations={r.evaluations}")
+
+
+def fig10_scaling():
+    for seq, mesh in ((8192, MeshSpec(("data", "seq", "model"), (2, 16, 2))),
+                      (16384, MeshSpec(("data", "seq", "model"), (2, 16, 2))),
+                      (32768, MeshSpec(("data", "seq", "model"),
+                                       (2, 32, 2)))):
+        art, names = common.artifacts_for("t2b", seq=seq, batch=8)
+        for variant in ("manual", "toast"):
+            r = common.run_variant(variant, art, names, mesh, HW,
+                                   mcts_cfg=MCTSConfig(rounds=6))
+            _row(f"fig10.t2b.seq{seq}.dev{mesh.num_devices}.{variant}",
+                 r.runtime_est * 1e6,
+                 f"cost={r.cost:.4f};peak_gb={r.peak_gb:.2f};"
+                 f"oom={int(r.oom)};search_s={r.search_s:.2f}")
+
+
+def nda_latency():
+    for model in MODELS:
+        t0 = time.perf_counter()
+        art, _ = common.artifacts_for(model)
+        t = time.perf_counter() - t0
+        _row(f"nda.analysis.{model}", t * 1e6,
+             f"ops={len(art.prog.ops)};colors={len(art.nda.color_summary())};"
+             f"conflicts={len(art.analysis.conflicts)};"
+             f"compat_sets={len(art.analysis.compat_sets)};"
+             f"bits={art.analysis.num_resolution_bits}")
+
+
+def kernel_micro():
+    from repro.kernels import ops, ref
+    key = jax.random.PRNGKey(0)
+    B, H, S, hd = 1, 4, 512, 64
+    q = jax.random.normal(key, (B, S, H, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, H, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, H, hd))
+
+    def timeit(f, n=3):
+        jax.block_until_ready(f())
+        t0 = time.perf_counter()
+        for _ in range(n):
+            jax.block_until_ready(f())
+        return (time.perf_counter() - t0) / n
+
+    t_flash = timeit(lambda: ops.gqa_flash_attention(q, k, v))
+    _row("kernel.flash_attention.interpret", t_flash * 1e6,
+         f"B{B}H{H}S{S}hd{hd}")
+    a = jax.nn.sigmoid(jax.random.normal(key, (2, 1024, 256)))
+    b = jax.random.normal(jax.random.fold_in(key, 3), (2, 1024, 256))
+    t_lru = timeit(lambda: ops.rg_lru(a, b))
+    _row("kernel.rg_lru.interpret", t_lru * 1e6, "B2S1024R256")
+    t_ref = timeit(lambda: ref.reference_rg_lru(a, b))
+    _row("kernel.rg_lru.jnp_oracle", t_ref * 1e6, "B2S1024R256")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--section", default="all",
+                    choices=["all", "fig8", "fig10", "nda", "kernels"])
+    ap.add_argument("--models", default=",".join(MODELS))
+    args = ap.parse_args()
+    models = tuple(args.models.split(","))
+    print("name,us_per_call,derived")
+    if args.section in ("all", "fig8"):
+        fig8_and_9(models)
+    if args.section in ("all", "fig10"):
+        fig10_scaling()
+    if args.section in ("all", "nda"):
+        nda_latency()
+    if args.section in ("all", "kernels"):
+        kernel_micro()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Inspect the NDA of any assigned architecture: colors, conflicts,
+compatibility sets, and the action space TOAST searches.
+
+    PYTHONPATH=src python examples/autoshard_inspect.py --arch mixtral_8x22b
+"""
+import argparse
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.core.actions import build_action_space
+from repro.core.cost_model import MeshSpec
+from repro.core.partitioner import analyze
+from repro.launch.specs import step_and_inputs
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="qwen2_05b", choices=ARCH_IDS)
+ap.add_argument("--shape", default="train_4k", choices=list(SHAPES))
+args = ap.parse_args()
+
+cfg = get_config(args.arch)
+fn, inputs, _ = step_and_inputs(cfg, SHAPES[args.shape])
+art = analyze(fn, inputs)
+
+summary = art.nda.color_summary()
+print(f"{args.arch} / {args.shape}:")
+print(f"  program: {len(art.prog.ops)} ops, "
+      f"{len(art.prog.inputs)} inputs")
+print(f"  colors (dimension classes to shard together): {len(summary)}")
+big = sorted(summary.items(), key=lambda kv: -len(kv[1]))[:8]
+for color, occ in big:
+    sizes = {art.prog.types[v].shape[d] for v, d in occ}
+    print(f"    color {color}: {len(occ)} dims, sizes {sorted(sizes)[:6]}")
+print(f"  conflicts: {len(art.analysis.conflicts)}")
+print(f"  compatibility sets: {len(art.analysis.compat_sets)}")
+print(f"  resolution bits after isomorphism merging "
+      f"(paper says 4 for a transformer): "
+      f"{art.analysis.num_resolution_bits}")
+mesh = MeshSpec(("data", "model"), (16, 16))
+actions = build_action_space(art.nda, art.analysis, mesh)
+print(f"  MCTS action space on 16x16 mesh: {len(actions)} actions")

@@ -1,0 +1,17 @@
+"""Batched serving example: prefill a batch of prompts, decode greedily
+from the KV cache, for any assigned architecture (reduced configs).
+
+    PYTHONPATH=src python examples/serve_decode.py --arch recurrentgemma_2b
+"""
+import argparse
+import subprocess
+import sys
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="qwen2_05b")
+args, rest = ap.parse_known_args()
+# serve.py is the production entry point; this example drives it reduced.
+sys.exit(subprocess.call(
+    [sys.executable, "-m", "repro.launch.serve", "--arch", args.arch,
+     "--reduced", "--batch", "4", "--prompt-len", "12", "--gen", "12",
+     *rest]))

@@ -1,0 +1,156 @@
+"""Sharded, atomic, elastic checkpointing.
+
+Layout::
+
+    <dir>/step_000042.tmp/...      (in-flight)
+    <dir>/step_000042/             (committed via atomic rename)
+        manifest.json              (tree structure, shapes, dtypes)
+        leaf_00000.npy ...         (one file per pytree leaf)
+
+Properties required at 1000+ node scale:
+
+- **Atomic commit** — a checkpoint is visible only after the tmp-dir
+  rename; a crash mid-write never corrupts the latest checkpoint.
+- **Elastic restore** — leaves are stored as full (unsharded) arrays keyed
+  by pytree path, so a checkpoint taken on one mesh restores onto *any*
+  mesh/device-count (``restore(..., shardings=...)`` re-shards on load).
+  On a real multi-host deployment each host would write only the shards it
+  owns (same manifest format, per-shard files); on this single-process
+  container full-array files are the faithful equivalent.
+- **Async save** — ``CheckpointManager.save_async`` snapshots to host RAM
+  synchronously (cheap) and writes to disk on a background thread,
+  overlapping the next training steps.
+- **Retention** — keeps the last ``keep`` checkpoints, deleting older ones
+  only after a newer commit succeeds.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    paths = [jax.tree_util.keystr(p) for p, _ in
+             jax.tree_util.tree_flatten_with_path(tree)[0]]
+    return leaves, paths, treedef
+
+
+def save(directory: str | pathlib.Path, step: int, tree: Any) -> pathlib.Path:
+    directory = pathlib.Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    final = directory / f"step_{step:08d}"
+    tmp = directory / f"step_{step:08d}.tmp"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    leaves, paths, _ = _flatten(tree)
+    manifest = {"step": step, "leaves": []}
+    for i, (leaf, path) in enumerate(zip(leaves, paths)):
+        arr = np.asarray(leaf)
+        fname = f"leaf_{i:05d}.npy"
+        np.save(tmp / fname, arr)
+        manifest["leaves"].append(
+            {"path": path, "file": fname, "shape": list(arr.shape),
+             "dtype": str(arr.dtype)})
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)                      # atomic commit
+    return final
+
+
+def latest_step(directory: str | pathlib.Path) -> int | None:
+    directory = pathlib.Path(directory)
+    if not directory.exists():
+        return None
+    steps = [int(p.name.split("_")[1]) for p in directory.iterdir()
+             if p.is_dir() and p.name.startswith("step_")
+             and not p.name.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(directory: str | pathlib.Path, step: int, like: Any,
+            shardings: Any = None) -> Any:
+    """Restore into the structure of ``like``; optionally place each leaf
+    with the given shardings (elastic re-shard onto any mesh)."""
+    directory = pathlib.Path(directory) / f"step_{step:08d}"
+    manifest = json.loads((directory / "manifest.json").read_text())
+    leaves, paths, treedef = _flatten(like)
+    by_path = {e["path"]: e for e in manifest["leaves"]}
+    shard_leaves = (jax.tree_util.tree_leaves(
+        shardings, is_leaf=lambda x: isinstance(x, jax.sharding.Sharding))
+        if shardings is not None else [None] * len(leaves))
+    out = []
+    for leaf, path, shd in zip(leaves, paths, shard_leaves):
+        entry = by_path.get(path)
+        if entry is None:
+            raise KeyError(f"checkpoint missing leaf {path}")
+        arr = np.load(directory / entry["file"])
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise ValueError(f"shape mismatch at {path}: "
+                             f"{arr.shape} vs {np.shape(leaf)}")
+        if shd is not None:
+            out.append(jax.device_put(arr, shd))
+        else:
+            out.append(jax.device_put(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | pathlib.Path, keep: int = 3):
+        self.directory = pathlib.Path(directory)
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
+
+    def save(self, step: int, tree: Any) -> None:
+        save(self.directory, step, tree)
+        self._gc()
+
+    def save_async(self, step: int, tree: Any) -> None:
+        """Snapshot to host RAM now; write on a background thread."""
+        self.wait()
+        host_tree = jax.tree_util.tree_map(lambda x: np.asarray(x), tree)
+
+        def work():
+            try:
+                save(self.directory, step, host_tree)
+                self._gc()
+            except BaseException as e:        # noqa: BLE001
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def latest_step(self) -> int | None:
+        return latest_step(self.directory)
+
+    def restore(self, like: Any, step: int | None = None,
+                shardings: Any = None) -> tuple[int, Any]:
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        return step, restore(self.directory, step, like, shardings)
+
+    def _gc(self) -> None:
+        steps = sorted(p for p in self.directory.iterdir()
+                       if p.is_dir() and p.name.startswith("step_")
+                       and not p.name.endswith(".tmp"))
+        for p in steps[:-self.keep]:
+            shutil.rmtree(p, ignore_errors=True)

@@ -1,0 +1,2 @@
+from repro.configs.base import (ARCH_IDS, SHAPES, ModelConfig, ShapeConfig,
+                                all_configs, cells, get_config)

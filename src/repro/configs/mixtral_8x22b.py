@@ -1,0 +1,12 @@
+"""Mixtral 8x22B [arXiv:2401.04088; hf] — MoE 8 experts top-2, sliding
+window attention."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mixtral_8x22b", family="moe", num_layers=56, d_model=6144,
+    num_heads=48, num_kv_heads=8, d_ff=16384, vocab_size=32768,
+    head_dim=128, mlp="swiglu", num_experts=8, experts_per_token=2,
+    sliding_window=4096,
+    moe_dispatch="batch",   # EXPERIMENTS.md §Perf H1: 7.7x over "global"
+    source="arXiv:2401.04088; hf",
+)

@@ -1,0 +1,9 @@
+"""Phi-3-mini 3.8B [arXiv:2404.14219; unverified] — dense, RoPE SwiGLU GQA."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi3_mini", family="dense", num_layers=32, d_model=3072,
+    num_heads=32, num_kv_heads=32, d_ff=8192, vocab_size=32064,
+    head_dim=96, mlp="swiglu",
+    source="arXiv:2404.14219; unverified",
+)

@@ -1,0 +1,80 @@
+"""Action space construction (paper §4.2).
+
+Actions are tuples ``dim_name × resolution_order × axis`` — here
+``(color, axis, bit_choices)`` where ``bit_choices`` fixes the resolution
+bit of each conflict supergroup the color touches.  The space is built once
+ahead of search; trivial actions (fewer than ``min_dims`` unique dims, the
+paper uses 10) are pruned; actions invalidated by the current sharding
+state (axis already consumed, color already sharded on that axis) are
+filtered during search.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+
+from repro.core.conflicts import ConflictAnalysis
+from repro.core.cost_model import MeshSpec, ShardingState
+from repro.core.nda import NDAResult
+
+
+@dataclasses.dataclass(frozen=True)
+class Action:
+    color: int
+    axis: str
+    bit_choices: tuple[tuple[int, int], ...] = ()
+
+    def apply(self, state: ShardingState) -> ShardingState:
+        return state.with_action(self.color, self.axis, self.bit_choices)
+
+
+STOP = Action(color=-1, axis="", bit_choices=())
+
+
+def build_action_space(nda: NDAResult, analysis: ConflictAnalysis,
+                       mesh: MeshSpec, *, min_dims: int = 10,
+                       max_bits_per_action: int = 2) -> list[Action]:
+    summary = nda.color_summary()
+    actions: list[Action] = []
+    for color, occ in summary.items():
+        if len(occ) < min_dims:
+            continue
+        sgs = analysis.color_supergroups.get(color, [])[:max_bits_per_action]
+        bit_sets: list[tuple[tuple[int, int], ...]]
+        if sgs:
+            bit_sets = [tuple(zip(sgs, combo))
+                        for combo in itertools.product((0, 1), repeat=len(sgs))]
+        else:
+            bit_sets = [()]
+        for axis, size in zip(mesh.axes, mesh.sizes):
+            if size <= 1:
+                continue
+            # at least one occurrence must be divisible by the axis size
+            if not any(_dim_size(nda, vid, d) % size == 0 and
+                       _dim_size(nda, vid, d) >= size for vid, d in occ):
+                continue
+            for bits in bit_sets:
+                actions.append(Action(color, axis, bits))
+    return actions
+
+
+def _dim_size(nda: NDAResult, vid: int, dim: int) -> int:
+    return nda.prog.types[vid].shape[dim]
+
+
+def valid_actions(actions: list[Action], state: ShardingState) -> list[Action]:
+    """Filter actions invalidated by the current sharding state (§4.2
+    step 2).  An axis may shard *different* colors — they usually live in
+    different tensors (Megatron puts hidden/heads/vocab all on one axis);
+    per-tensor clashes are rejected by the cost model's site validation."""
+    ca, bits = state.as_dicts()
+    out = []
+    for a in actions:
+        if a.axis in ca.get(a.color, ()):
+            continue                      # duplicate (color, axis)
+        # resolution bits already fixed differently -> invalid duplicate
+        if any(bits.get(sg, b) != b for sg, b in a.bit_choices):
+            continue
+        out.append(a)
+    return out

@@ -1,0 +1,352 @@
+"""Analytical cost model (paper §4.5).
+
+An abstract interpreter over the extracted Program that, given a sharding
+state (color→axes assignment + conflict resolution bits), estimates:
+
+- per-op compute time via a roofline (matmul-class FLOPs vs HBM bytes),
+- collective communication time for the resharding implied between value
+  defs and uses (all_gather / all_to_all), for contracting-dim sharding
+  (all_reduce), and for sharded reductions,
+- peak per-device memory via live-range analysis.
+
+The MCTS consumes *relative* cost: C(s) = RT(s) + MP(s), with
+RT = runtime(s)/runtime(unsharded) and MP a penalty only above the
+per-device memory budget — exactly the paper's formulation.
+
+Hardware constants default to TPU v5e (197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI) per the assignment's roofline spec.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import defaultdict
+
+import numpy as np
+
+from repro.core.conflicts import ConflictAnalysis
+from repro.core.ir import Program
+from repro.core.nda import NDAResult
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    flops_per_chip: float = 197e12      # bf16 peak
+    hbm_bw: float = 819e9               # bytes/s
+    ici_bw: float = 50e9                # bytes/s per link (per mesh axis)
+    dcn_bw: float = 6.25e9              # bytes/s cross-pod (50 Gbit)
+    hbm_per_chip: float = 16e9          # v5e: 16 GiB
+    mem_penalty_scale: float = 10.0     # paper's constant C
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshSpec:
+    axes: tuple[str, ...]
+    sizes: tuple[int, ...]
+    # axes whose links traverse DCN rather than ICI (e.g. "pod")
+    dcn_axes: tuple[str, ...] = ()
+
+    def size(self, axis: str) -> int:
+        return self.sizes[self.axes.index(axis)]
+
+    @property
+    def num_devices(self) -> int:
+        return int(np.prod(self.sizes))
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingState:
+    """Canonical, order-independent search state (paper §4.3)."""
+    color_axes: tuple[tuple[int, tuple[str, ...]], ...] = ()
+    bits: tuple[tuple[int, int], ...] = ()           # (supergroup, bit)
+
+    def as_dicts(self):
+        return dict(self.color_axes), dict(self.bits)
+
+    def with_action(self, color: int, axis: str,
+                    bit_choices: tuple[tuple[int, int], ...]) -> "ShardingState":
+        ca, bits = self.as_dicts()
+        ca[color] = tuple(list(ca.get(color, ())) + [axis])
+        for sg, b in bit_choices:
+            bits.setdefault(sg, b)
+        return ShardingState(tuple(sorted(ca.items())),
+                             tuple(sorted(bits.items())))
+
+    @property
+    def used_axes(self) -> set[str]:
+        return {a for _, axes in self.color_axes for a in axes}
+
+
+@dataclasses.dataclass
+class CostBreakdown:
+    compute_time: float = 0.0
+    memory_time: float = 0.0
+    collective_time: float = 0.0
+    peak_bytes: float = 0.0
+    flops: float = 0.0
+    comm_bytes: float = 0.0
+
+    @property
+    def runtime(self) -> float:
+        # sequential program: per-op max(compute, hbm) summed, plus comms
+        return self.compute_time + self.collective_time
+
+    def as_dict(self):
+        return dataclasses.asdict(self) | {"runtime": self.runtime}
+
+
+_MATMUL_PRIMS = {"dot_general", "conv_general_dilated"}
+
+
+class CostModel:
+    def __init__(self, prog: Program, nda: NDAResult,
+                 analysis: ConflictAnalysis, mesh: MeshSpec,
+                 hw: HardwareSpec = HardwareSpec()) -> None:
+        self.prog = prog
+        self.nda = nda
+        self.analysis = analysis
+        self.mesh = mesh
+        self.hw = hw
+        # index use sites by (op_index, slot)
+        self.use_site = {}
+        for s in nda.use_sites:
+            self.use_site[(s.op_index, s.slot)] = s
+        # last use per value for live-range analysis
+        self.last_use: dict[int, int] = {}
+        for i, op in enumerate(prog.ops):
+            for vid in op.operands:
+                self.last_use[vid] = i
+        self._baseline: CostBreakdown | None = None
+        # cache: state -> cost breakdown
+        self._cache: dict[ShardingState, CostBreakdown] = {}
+
+    # -- sharding resolution ------------------------------------------------
+
+    def _chosen_suppressed(self, bits: dict[int, int]):
+        chosen: set[int] = set()
+        suppressed: set[int] = set()
+        for gi, sg in enumerate(self.analysis.supergroups):
+            bit = bits.get(gi, 0)
+            for sid in sg:
+                cs = self.analysis.compat_sets[sid]
+                for c in cs.conflicts:
+                    s0, s1 = cs.sides[c.cid]
+                    chosen.add(s1 if bit else s0)
+                    suppressed.add(s0 if bit else s1)
+        return chosen, suppressed - chosen
+
+    def site_axes(self, site, color_axes: dict, suppressed: set[int]
+                  ) -> list[tuple[str, ...]]:
+        """Mesh axes sharding each dim of a site, conflict-resolved and
+        validated (an axis shards at most one dim; divisibility holds)."""
+        out: list[tuple[str, ...]] = []
+        seen_axes: set[str] = set()
+        for i, n in enumerate(site.dims):
+            color = self.nda.color(n)
+            axes = color_axes.get(color, ())
+            if not axes:
+                out.append(())
+                continue
+            if self.nda.group(n) in suppressed:
+                out.append(())
+                continue
+            ok: list[str] = []
+            size = self.nda.node_sizes.get(n, 0)
+            for a in axes:
+                f = self.mesh.size(a)
+                if a in seen_axes or size % f != 0 or size < f:
+                    continue
+                ok.append(a)
+                seen_axes.add(a)
+                size //= f
+            out.append(tuple(ok))
+        return out
+
+    def _factor(self, axes_per_dim) -> int:
+        f = 1
+        for axes in axes_per_dim:
+            for a in axes:
+                f *= self.mesh.size(a)
+        return f
+
+    def _axis_bw(self, axis: str) -> float:
+        return (self.hw.dcn_bw if axis in self.mesh.dcn_axes
+                else self.hw.ici_bw)
+
+    def _collective(self, kind: str, full_bytes: float, axes) -> float:
+        """Time for a collective over the given mesh axes."""
+        t = 0.0
+        for a in axes:
+            n = self.mesh.size(a)
+            if n <= 1:
+                continue
+            bw = self._axis_bw(a)
+            if kind == "all_reduce":
+                t += 2.0 * (n - 1) / n * full_bytes / bw
+            elif kind in ("all_gather", "reduce_scatter"):
+                t += (n - 1) / n * full_bytes / bw
+            elif kind == "all_to_all":
+                t += (n - 1) / (n * n) * full_bytes / bw
+        return t
+
+    # -- evaluation ----------------------------------------------------------
+
+    def evaluate(self, state: ShardingState) -> CostBreakdown:
+        if state in self._cache:
+            return self._cache[state]
+        color_axes, bits = state.as_dicts()
+        _, suppressed = self._chosen_suppressed(bits)
+        bd = CostBreakdown()
+        live: dict[int, float] = {}
+
+        def local_bytes(vid: int, axes_per_dim) -> float:
+            return self.prog.types[vid].nbytes / self._factor(axes_per_dim)
+
+        # program inputs live from the start
+        for vid in self.prog.inputs:
+            site = self.nda.def_site[vid]
+            axes = self.site_axes(site, color_axes, suppressed)
+            live[vid] = local_bytes(vid, axes)
+        peak = sum(live.values())
+
+        for op_idx, op in enumerate(self.prog.ops):
+            trip = self.prog.trip_counts.get(op_idx, 1)
+            use_axes = []
+            # 1. resharding between def and use
+            for slot, vid in enumerate(op.operands):
+                usite = self.use_site.get((op_idx, slot))
+                if usite is None:
+                    use_axes.append(())
+                    continue
+                ua = self.site_axes(usite, color_axes, suppressed)
+                use_axes.append(ua)
+                dsite = self.nda.def_site.get(vid)
+                if dsite is None or len(dsite.dims) != len(usite.dims):
+                    continue
+                da = self.site_axes(dsite, color_axes, suppressed)
+                t, b = self._reshard_cost(vid, da, ua, trip)
+                bd.collective_time += t
+                bd.comm_bytes += b
+
+            # 2. compute + memory roofline
+            out_axes = []
+            for r in op.results:
+                rsite = self.nda.def_site[r]
+                out_axes.append(self.site_axes(rsite, color_axes, suppressed))
+            flops, contract_axes = self._op_flops(op, use_axes, out_axes)
+            bytes_moved = sum(local_bytes(v, a)
+                              for v, a in zip(op.operands, use_axes)) + \
+                sum(local_bytes(r, a) for r, a in zip(op.results, out_axes))
+            t_comp = flops / self.hw.flops_per_chip
+            t_mem = bytes_moved / self.hw.hbm_bw
+            bd.compute_time += max(t_comp, t_mem) * trip
+            bd.memory_time += t_mem * trip
+            bd.flops += flops * trip
+
+            # 3. partial-reduction all_reduce (contracting dim sharded)
+            if contract_axes:
+                out_local = sum(local_bytes(r, a)
+                                for r, a in zip(op.results, out_axes))
+                t = self._collective("all_reduce", out_local, contract_axes)
+                bd.collective_time += t * trip
+                bd.comm_bytes += out_local * 2 * trip
+
+            # 4. live-range memory
+            for r, a in zip(op.results, out_axes):
+                live[r] = local_bytes(r, a)
+            peak = max(peak, sum(live.values()))
+            for slot, vid in enumerate(op.operands):
+                if self.last_use.get(vid) == op_idx and \
+                        vid not in self.prog.outputs:
+                    live.pop(vid, None)
+
+        bd.peak_bytes = peak
+        self._cache[state] = bd
+        return bd
+
+    def _reshard_cost(self, vid: int, da, ua, trip: int):
+        """Cost of converting def-sharding to use-sharding."""
+        t = 0.0
+        b = 0.0
+        nbytes = self.prog.types[vid].nbytes
+        gathered, scattered = [], []
+        for i, (d_ax, u_ax) in enumerate(zip(da, ua)):
+            for a in d_ax:
+                if a not in u_ax:
+                    gathered.append(a)
+            for a in u_ax:
+                if a not in d_ax:
+                    scattered.append(a)
+        if not gathered:
+            return 0.0, 0.0    # refining replication to sharding is local
+        moved = set(gathered) & set(scattered)
+        for a in moved:        # axis moved between dims -> all_to_all
+            local = nbytes / self._factor(da)
+            t += self._collective("all_to_all", local, [a])
+            b += local / self.mesh.size(a)
+            gathered.remove(a)
+        if gathered:           # remaining: all_gather
+            within = nbytes / self._factor(
+                [tuple(a for a in ax if a not in gathered) for ax in da])
+            t += self._collective("all_gather", within, gathered)
+            b += within
+        return t * trip, b * trip
+
+    def _op_flops(self, op, use_axes, out_axes):
+        """Local FLOPs of the op and the axes sharding contracting dims."""
+        if op.prim == "dot_general":
+            (lc, rc), (lb, rb) = op.params["dimension_numbers"]
+            lhs_t = self.prog.types[op.operands[0]]
+            out_sz = self.prog.types[op.results[0]].size
+            k = 1
+            for i in lc:
+                k *= lhs_t.shape[i]
+            full = 2.0 * out_sz * k
+            factor = self._factor(out_axes[0]) if out_axes else 1
+            contract_axes = []
+            if use_axes and use_axes[0]:
+                for i in lc:
+                    if i < len(use_axes[0]):
+                        for a in use_axes[0][i]:
+                            contract_axes.append(a)
+                            factor *= self.mesh.size(a)
+            return full / factor, contract_axes
+        if op.prim == "conv_general_dilated":
+            out_t = self.prog.types[op.results[0]]
+            rhs_t = self.prog.types[op.operands[1]]
+            full = 2.0 * out_t.size * rhs_t.size / max(
+                1, rhs_t.shape[0] if rhs_t.shape else 1)
+            factor = self._factor(out_axes[0]) if out_axes else 1
+            return full / factor, []
+        # reductions with sharded reduced dims need an all_reduce
+        contract_axes = []
+        if op.prim.startswith("reduce_") or op.prim in ("argmax", "argmin"):
+            axes_param = op.params.get("axes", ())
+            if use_axes and use_axes[0]:
+                for i in axes_param:
+                    if i < len(use_axes[0]):
+                        contract_axes.extend(use_axes[0][i])
+        out_sz = sum(self.prog.types[r].size for r in op.results)
+        factor = self._factor(out_axes[0]) if out_axes else 1
+        return out_sz / factor, contract_axes
+
+    # -- paper cost ----------------------------------------------------------
+
+    def baseline(self) -> CostBreakdown:
+        if self._baseline is None:
+            self._baseline = self.evaluate(ShardingState())
+        return self._baseline
+
+    def paper_cost(self, state: ShardingState) -> float:
+        """C(s) = RT(s) + MP(s) — paper §4.5."""
+        base = self.baseline()
+        bd = self.evaluate(state)
+        rt = bd.runtime / max(base.runtime, 1e-12)
+        dm = self.hw.hbm_per_chip
+        if bd.peak_bytes > dm:
+            mp = self.hw.mem_penalty_scale * \
+                (bd.peak_bytes - dm) / max(base.peak_bytes, 1e-12)
+        else:
+            mp = 0.0
+        return rt + mp

@@ -1,0 +1,250 @@
+"""Light tensor IR extracted from a jaxpr.
+
+The paper's NDA operates on straight-line tensor programs in ANF (SSA).
+A jaxpr is exactly that.  We extract a flat ``Program`` of ``Op`` nodes over
+integer value ids, inlining call-like sub-jaxprs (pjit, custom_jvp/vjp,
+remat) and instantiating ``scan``/``while`` bodies once with explicit
+carry-in/carry-out connections (see nda.py for how those connections become
+identities).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import numpy as np
+from jax.extend import core as jcore
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorType:
+    shape: tuple[int, ...]
+    dtype: Any
+
+    @property
+    def rank(self) -> int:
+        return len(self.shape)
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+    @property
+    def nbytes(self) -> int:
+        return self.size * np.dtype(self.dtype).itemsize
+
+
+@dataclasses.dataclass
+class Op:
+    prim: str
+    params: dict
+    operands: list[int]          # value ids ( -1 for literals )
+    results: list[int]           # value ids
+    # For scan-instantiated ops, records which structural role each
+    # operand/result plays; used by nda to add loop-carried identities.
+    meta: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class Program:
+    ops: list[Op] = dataclasses.field(default_factory=list)
+    types: dict[int, TensorType] = dataclasses.field(default_factory=dict)
+    inputs: list[int] = dataclasses.field(default_factory=list)
+    outputs: list[int] = dataclasses.field(default_factory=list)
+    input_paths: list[str] = dataclasses.field(default_factory=list)
+    # extra identity links between values: (vid_a, vid_b, offset_a) means
+    # dims[offset_a:] of a are identified dim-wise with dims of b.  Produced
+    # by scan carry connections (offset 0) and scan xs/ys slicing (offset 1).
+    value_links: list[tuple[int, int, int]] = dataclasses.field(default_factory=list)
+    # number of loop iterations each op executes (1 for top level,
+    # `length` for ops inside a scan body) — used by the cost model.
+    trip_counts: dict[int, int] = dataclasses.field(default_factory=dict)
+
+    def new_value(self, shape, dtype) -> int:
+        vid = len(self.types)
+        self.types[vid] = TensorType(tuple(int(s) for s in shape), dtype)
+        return vid
+
+    def add_op(self, op: Op, trip: int = 1) -> None:
+        self.trip_counts[len(self.ops)] = trip
+        self.ops.append(op)
+
+
+_CALL_PRIMS = {
+    "pjit", "closed_call", "custom_jvp_call", "custom_vjp_call",
+    "custom_vjp_call_jaxpr", "remat", "remat2", "checkpoint", "core_call",
+    "xla_call", "sharding_constraint_call", "jit",
+}
+
+
+def _sub_jaxpr(prim_name: str, params: dict):
+    for key in ("jaxpr", "call_jaxpr", "fun_jaxpr"):
+        if key in params:
+            j = params[key]
+            return j
+    return None
+
+
+class _Extractor:
+    def __init__(self) -> None:
+        self.prog = Program()
+
+    def value_for(self, atom, env: dict) -> int:
+        if isinstance(atom, jcore.Literal):
+            val = atom.val
+            aval = atom.aval
+            vid = self.prog.new_value(getattr(aval, "shape", ()),
+                                      getattr(aval, "dtype", np.float32))
+            return vid
+        return env[atom]
+
+    def bind_var(self, var, env: dict) -> int:
+        vid = self.prog.new_value(var.aval.shape, var.aval.dtype)
+        env[var] = vid
+        return vid
+
+    def extract(self, jaxpr, arg_ids: list[int], env: dict | None = None,
+                trip: int = 1) -> list[int]:
+        """Walk a (open) jaxpr, returning value ids of its outputs."""
+        env = {} if env is None else env
+        assert len(jaxpr.invars) == len(arg_ids), (len(jaxpr.invars), len(arg_ids))
+        for var, vid in zip(jaxpr.invars, arg_ids):
+            env[var] = vid
+        for var in jaxpr.constvars:
+            env[var] = self.prog.new_value(var.aval.shape, var.aval.dtype)
+        for eqn in jaxpr.eqns:
+            self._handle_eqn(eqn, env, trip)
+        return [self.value_for(v, env) for v in jaxpr.outvars]
+
+    # -- handlers ---------------------------------------------------------
+
+    def _handle_eqn(self, eqn, env, trip) -> None:
+        name = eqn.primitive.name
+        if name in _CALL_PRIMS or _sub_jaxpr(name, eqn.params) is not None and \
+                name not in ("scan", "while", "cond"):
+            sub = _sub_jaxpr(name, eqn.params)
+            if sub is not None:
+                closed = sub if hasattr(sub, "jaxpr") else None
+                inner = closed.jaxpr if closed is not None else sub
+                in_ids = [self.value_for(a, env) for a in eqn.invars]
+                # custom_jvp/vjp pass extra tracing args sometimes; align tails
+                n = len(inner.invars)
+                out_ids = self.extract(inner, in_ids[-n:], {}, trip)
+                for var, vid in zip(eqn.outvars, out_ids):
+                    env[var] = vid
+                return
+        if name == "scan":
+            self._handle_scan(eqn, env, trip)
+            return
+        if name == "while":
+            self._handle_while(eqn, env, trip)
+            return
+        if name == "cond":
+            self._handle_cond(eqn, env, trip)
+            return
+        # plain op
+        in_ids = [self.value_for(a, env) for a in eqn.invars]
+        out_ids = [self.bind_var(v, env) for v in eqn.outvars]
+        self.prog.add_op(Op(name, dict(eqn.params), in_ids, out_ids), trip)
+
+    def _handle_scan(self, eqn, env, trip) -> None:
+        p = eqn.params
+        closed = p["jaxpr"]
+        inner = closed.jaxpr
+        num_consts, num_carry = p["num_consts"], p["num_carry"]
+        length = int(p["length"])
+        invals = [self.value_for(a, env) for a in eqn.invars]
+        consts = invals[:num_consts]
+        carries = invals[num_consts:num_consts + num_carry]
+        xss = invals[num_consts + num_carry:]
+        # one symbolic iteration: body consts = consts; body carries fresh
+        # values dim-linked to outer carries; body xs = one slice of xss.
+        body_args: list[int] = list(consts)
+        body_carry_ids = []
+        for c in carries:
+            t = self.prog.types[c]
+            b = self.prog.new_value(t.shape, t.dtype)
+            self.prog.value_links.append((c, b, 0))
+            body_carry_ids.append(b)
+        body_args += body_carry_ids
+        body_xs_ids = []
+        for xs in xss:
+            t = self.prog.types[xs]
+            b = self.prog.new_value(t.shape[1:], t.dtype)
+            # dim i+1 of xs links to dim i of slice — recorded as sliced link
+            self.prog.value_links.append((xs, b, 1))
+            body_xs_ids.append(b)
+        body_args += body_xs_ids
+        outs = self.extract(inner, body_args, {}, trip * length)
+        carry_outs = outs[:num_carry]
+        y_outs = outs[num_carry:]
+        # outer results
+        out_ids = []
+        for i, var in enumerate(eqn.outvars):
+            vid = self.bind_var(var, env)
+            out_ids.append(vid)
+            if i < num_carry:
+                # loop: body carry out ≗ outer result ≗ body carry in
+                self.prog.value_links.append((carry_outs[i], vid, 0))
+                self.prog.value_links.append((body_carry_ids[i], vid, 0))
+            else:
+                y = y_outs[i - num_carry]
+                self.prog.value_links.append((vid, y, 1))
+
+    def _handle_while(self, eqn, env, trip) -> None:
+        p = eqn.params
+        body = p["body_jaxpr"].jaxpr
+        nb = p["body_nconsts"]
+        invals = [self.value_for(a, env) for a in eqn.invars]
+        # invars: cond_consts..., body_consts..., carry...
+        nc = p["cond_nconsts"]
+        body_consts = invals[nc:nc + nb]
+        carries = invals[nc + nb:]
+        body_carry_ids = []
+        for c in carries:
+            t = self.prog.types[c]
+            b = self.prog.new_value(t.shape, t.dtype)
+            self.prog.value_links.append((c, b, 0))
+            body_carry_ids.append(b)
+        outs = self.extract(body, body_consts + body_carry_ids, {}, trip)
+        for i, var in enumerate(eqn.outvars):
+            vid = self.bind_var(var, env)
+            self.prog.value_links.append((outs[i], vid, 0))
+            self.prog.value_links.append((body_carry_ids[i], vid, 0))
+
+    def _handle_cond(self, eqn, env, trip) -> None:
+        p = eqn.params
+        branches = p["branches"]
+        invals = [self.value_for(a, env) for a in eqn.invars]
+        out_ids = [self.bind_var(v, env) for v in eqn.outvars]
+        for br in branches:
+            outs = self.extract(br.jaxpr, invals[1:], {}, trip)
+            for o, r in zip(outs, out_ids):
+                self.prog.value_links.append((o, r, 0))
+
+
+def extract_program(fn, *args, **kwargs) -> Program:
+    """Trace ``fn`` to a jaxpr and extract the flat Program."""
+    closed = jax.make_jaxpr(fn)(*args, **kwargs)
+    return extract_from_jaxpr(closed, args, kwargs)
+
+
+def extract_from_jaxpr(closed, args=(), kwargs=None) -> Program:
+    ex = _Extractor()
+    jaxpr = closed.jaxpr
+    arg_ids = []
+    for var in jaxpr.invars:
+        arg_ids.append(ex.prog.new_value(var.aval.shape, var.aval.dtype))
+    ex.prog.inputs = list(arg_ids)
+    # pytree paths for plan mapping
+    try:
+        flat, _ = jax.tree_util.tree_flatten_with_path((args, kwargs or {}))
+        ex.prog.input_paths = [jax.tree_util.keystr(p) for p, _ in flat]
+    except Exception:
+        ex.prog.input_paths = [f"arg{i}" for i in range(len(arg_ids))]
+    if len(ex.prog.input_paths) != len(arg_ids):
+        ex.prog.input_paths = [f"arg{i}" for i in range(len(arg_ids))]
+    ex.prog.outputs = ex.extract(jaxpr, arg_ids)
+    return ex.prog

@@ -1,0 +1,179 @@
+"""Monte-Carlo Tree Search partitioning agent (paper §4.1–4.3).
+
+Faithful to the paper's adaptations of standard UCT:
+
+- **State** is the canonical sharding map (``ShardingState``), not the
+  action sequence — any action ordering reaching the same sharded model
+  hits the same node (transposition-free by construction, §4.3).
+- **Early round termination**: the search runs in rounds of trajectories;
+  if a round fails to improve the best-known cost, the whole search stops
+  (§4.1).
+- **Short-trajectory incentive**: rewards are discounted in trajectory
+  length so shorter action sequences with equal cost are preferred (§4.1).
+- Trajectories end on a explicit *stop* action or at ``max_depth`` (30 in
+  the paper).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import random
+
+from repro.core.actions import Action, STOP, valid_actions
+from repro.core.cost_model import CostModel, ShardingState
+
+
+@dataclasses.dataclass
+class MCTSConfig:
+    rounds: int = 12
+    trajectories_per_round: int = 48
+    max_depth: int = 30
+    exploration: float = 0.7
+    length_penalty: float = 0.01       # short-trajectory incentive
+    seed: int = 0
+    patience: int = 1                  # rounds without improvement -> stop
+
+
+class _Node:
+    __slots__ = ("visits", "value", "children", "untried")
+
+    def __init__(self, untried: list[Action]) -> None:
+        self.visits = 0
+        self.value = 0.0
+        self.children: dict[Action, ShardingState] = {}
+        self.untried = untried
+
+
+@dataclasses.dataclass
+class SearchResult:
+    best_state: ShardingState
+    best_cost: float
+    best_actions: list[Action]
+    rounds_run: int
+    evaluations: int
+    history: list[float]
+
+
+class MCTS:
+    def __init__(self, cost_model: CostModel, actions: list[Action],
+                 config: MCTSConfig = MCTSConfig()) -> None:
+        self.cm = cost_model
+        self.actions = actions
+        self.cfg = config
+        self.rng = random.Random(config.seed)
+        self.nodes: dict[ShardingState, _Node] = {}
+        self.evaluations = 0
+
+    def _node(self, state: ShardingState) -> _Node:
+        n = self.nodes.get(state)
+        if n is None:
+            n = _Node(valid_actions(self.actions, state) + [STOP])
+            self.rng.shuffle(n.untried)
+            self.nodes[state] = n
+        return n
+
+    def _cost(self, state: ShardingState) -> float:
+        self.evaluations += 1
+        return self.cm.paper_cost(state)
+
+    def _reward(self, cost: float, depth: int) -> float:
+        return 1.0 - cost - self.cfg.length_penalty * depth
+
+    def _uct(self, parent: _Node, child_state: ShardingState) -> float:
+        child = self._node(child_state)
+        if child.visits == 0:
+            return float("inf")
+        exploit = child.value / child.visits
+        explore = self.cfg.exploration * math.sqrt(
+            math.log(max(parent.visits, 1)) / child.visits)
+        return exploit + explore
+
+    def _trajectory(self, root: ShardingState):
+        """One rollout; returns (visited states, final state, depth)."""
+        path = [root]
+        state = root
+        depth = 0
+        while depth < self.cfg.max_depth:
+            node = self._node(state)
+            if node.untried:
+                action = node.untried.pop()
+            else:
+                if not node.children:
+                    break
+                action = max(node.children,
+                             key=lambda a: self._uct(node, node.children[a]))
+            if action is STOP or action.color < 0:
+                break
+            nxt = action.apply(state)
+            node.children[action] = nxt
+            if nxt == state:
+                break
+            path.append(nxt)
+            state = nxt
+            depth += 1
+            # random playout extension: after expansion, follow random
+            # actions without tree bookkeeping
+            node2 = self._node(state)
+            if node2.visits == 0:
+                # playout
+                s = state
+                d = depth
+                while d < self.cfg.max_depth:
+                    av = valid_actions(self.actions, s)
+                    if not av or self.rng.random() < 0.35:
+                        break
+                    s = self.rng.choice(av).apply(s)
+                    d += 1
+                return path, s, d
+        return path, state, depth
+
+    def search(self, root: ShardingState = ShardingState()) -> SearchResult:
+        best_state = root
+        best_cost = self._cost(root)
+        best_path: list[ShardingState] = [root]
+        history = [best_cost]
+        stale = 0
+        rounds_run = 0
+        for rnd in range(self.cfg.rounds):
+            rounds_run += 1
+            improved = False
+            for _ in range(self.cfg.trajectories_per_round):
+                path, final, depth = self._trajectory(root)
+                cost = self._cost(final)
+                reward = self._reward(cost, depth)
+                for s in path:
+                    n = self._node(s)
+                    n.visits += 1
+                    n.value += reward
+                # every prefix state of the trajectory is itself a candidate
+                for s in path:
+                    c = self._cost(s)
+                    if c < best_cost - 1e-12:
+                        best_cost, best_state, improved = c, s, True
+                        best_path = list(path[:path.index(s) + 1])
+                if cost < best_cost - 1e-12:
+                    best_cost, best_state, improved = cost, final, True
+                    best_path = path + [final]
+            history.append(best_cost)
+            if not improved:
+                stale += 1
+                if stale >= self.cfg.patience:
+                    break           # paper: stop when a round fails to improve
+            else:
+                stale = 0
+        actions = _recover_actions(best_state)
+        return SearchResult(best_state, best_cost, actions, rounds_run,
+                            self.evaluations, history)
+
+
+def _recover_actions(state: ShardingState) -> list[Action]:
+    ca, bits = state.as_dicts()
+    out = []
+    bit_items = tuple(sorted(bits.items()))
+    first = True
+    for color, axes in sorted(ca.items()):
+        for axis in axes:
+            out.append(Action(color, axis, bit_items if first else ()))
+            first = False
+    return out

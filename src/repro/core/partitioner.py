@@ -1,0 +1,224 @@
+"""TOAST front-end: trace a JAX function, run the NDA + conflict analysis,
+search with MCTS, and emit a ``ShardingPlan`` of ``PartitionSpec``s.
+
+Typical use::
+
+    plan = auto_partition(train_step, (params, batch),
+                          mesh=MeshSpec(("data", "model"), (16, 16)))
+    jitted = jax.jit(train_step, in_shardings=plan.jax_in_shardings(mesh))
+
+Intermediate conflict resolutions (e.g. sequence sharding of attention
+scores) surface in ``plan.constraint_specs`` and — when the caller declares
+logical dimension names for inputs — as ``plan.logical_rules`` consumed by
+the models' ``with_sharding_constraint`` hooks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from collections import Counter, defaultdict
+from typing import Any, Callable
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.core.actions import Action, build_action_space
+from repro.core.conflicts import ConflictAnalysis, analyze_conflicts
+from repro.core.cost_model import (CostBreakdown, CostModel, HardwareSpec,
+                                   MeshSpec, ShardingState)
+from repro.core.ir import Program, extract_program
+from repro.core.mcts import MCTS, MCTSConfig
+from repro.core.nda import NDAResult, run_nda
+
+
+@dataclasses.dataclass
+class ShardingPlan:
+    mesh: MeshSpec
+    in_specs: list[PartitionSpec]
+    input_paths: list[str]
+    state: ShardingState
+    cost: float
+    breakdown: dict
+    baseline_breakdown: dict
+    constraint_specs: dict[int, PartitionSpec]
+    logical_rules: dict[str, tuple[str, ...]]
+    search_seconds: float
+    evaluations: int
+    num_colors: int
+    num_conflicts: int
+    num_compat_sets: int
+    num_resolution_bits: int
+
+    def jax_in_shardings(self, mesh: jax.sharding.Mesh, treedef=None):
+        specs = [NamedSharding(mesh, s) for s in self.in_specs]
+        if treedef is not None:
+            return jax.tree_util.tree_unflatten(treedef, specs)
+        return specs
+
+    def spec_for(self, path_substr: str) -> PartitionSpec | None:
+        for p, s in zip(self.input_paths, self.in_specs):
+            if path_substr in p:
+                return s
+        return None
+
+    def to_json(self) -> str:
+        return json.dumps({
+            "mesh": {"axes": self.mesh.axes, "sizes": self.mesh.sizes},
+            "in_specs": [list(map(_spec_entry, s)) for s in self.in_specs],
+            "input_paths": self.input_paths,
+            "cost": self.cost,
+            "breakdown": self.breakdown,
+            "baseline_breakdown": self.baseline_breakdown,
+            "logical_rules": {k: list(v) for k, v in
+                              self.logical_rules.items()},
+            "search_seconds": self.search_seconds,
+            "evaluations": self.evaluations,
+            "num_colors": self.num_colors,
+            "num_conflicts": self.num_conflicts,
+            "num_compat_sets": self.num_compat_sets,
+            "num_resolution_bits": self.num_resolution_bits,
+        }, indent=2)
+
+
+def _spec_entry(e):
+    if e is None:
+        return None
+    if isinstance(e, tuple):
+        return list(e)
+    return e
+
+
+@dataclasses.dataclass
+class ToastArtifacts:
+    """Analysis artifacts, reusable across searches (heavily cached —
+    paper §5.3)."""
+    prog: Program
+    nda: NDAResult
+    analysis: ConflictAnalysis
+    actions_by_mesh: dict = dataclasses.field(default_factory=dict)
+
+
+def analyze(fn: Callable, args: tuple, kwargs: dict | None = None
+            ) -> ToastArtifacts:
+    prog = extract_program(fn, *args, **(kwargs or {}))
+    nda = run_nda(prog)
+    analysis = analyze_conflicts(nda)
+    return ToastArtifacts(prog, nda, analysis)
+
+
+def _state_specs(cm: CostModel, state: ShardingState,
+                 prog: Program) -> list[PartitionSpec]:
+    color_axes, bits = state.as_dicts()
+    _, suppressed = cm._chosen_suppressed(bits)
+    specs = []
+    for vid in prog.inputs:
+        site = cm.nda.def_site[vid]
+        axes = cm.site_axes(site, color_axes, suppressed)
+        specs.append(PartitionSpec(*[
+            (a[0] if len(a) == 1 else tuple(a)) if a else None
+            for a in axes]))
+    return specs
+
+
+def _constraint_specs(cm: CostModel, state: ShardingState,
+                      analysis: ConflictAnalysis) -> dict[int, PartitionSpec]:
+    color_axes, bits = state.as_dicts()
+    _, suppressed = cm._chosen_suppressed(bits)
+    out: dict[int, PartitionSpec] = {}
+    for c in analysis.conflicts:
+        if c.color not in color_axes:
+            continue
+        for w in c.witnesses:
+            if w.site.kind != "def":
+                continue
+            axes = cm.site_axes(w.site, color_axes, suppressed)
+            out[w.site.value] = PartitionSpec(*[
+                (a[0] if len(a) == 1 else tuple(a)) if a else None
+                for a in axes])
+    return out
+
+
+def _is_name_tuple(x) -> bool:
+    # NB: the empty tuple is a *container* (matches empty containers in the
+    # args tree), never a name leaf — else flatten order desynchronises.
+    return x is None or (isinstance(x, tuple) and type(x) is tuple and
+                         len(x) > 0 and
+                         all(isinstance(e, (str, type(None))) for e in x))
+
+
+def flatten_logical_axes(names_tree) -> list[tuple[str, ...] | None]:
+    """Flatten a logical-names pytree (tuples of dim names at leaf
+    positions) into the input-leaf order used by ``extract_program``."""
+    return [x if isinstance(x, tuple) else None
+            for x in jax.tree_util.tree_leaves(names_tree,
+                                               is_leaf=_is_name_tuple)]
+
+
+def _logical_rules(nda: NDAResult, prog: Program, state: ShardingState,
+                   logical_axes: list[tuple[str, ...]] | None
+                   ) -> dict[str, tuple[str, ...]]:
+    """Project the color→axes assignment onto caller-declared logical
+    dimension names (majority vote per color)."""
+    if logical_axes is None:
+        return {}
+    color_axes, _ = state.as_dicts()
+    votes: dict[int, Counter] = defaultdict(Counter)
+    for vid, names in zip(prog.inputs, logical_axes):
+        if names is None:
+            continue
+        cols = nda.colors_of_value(vid)
+        for col, name in zip(cols, names):
+            if name:
+                votes[col][name] += 1
+    rules: dict[str, tuple[str, ...]] = {}
+    for col, axes in color_axes.items():
+        if col in votes and axes:
+            name = votes[col].most_common(1)[0][0]
+            rules[name] = tuple(axes)
+    return rules
+
+
+def auto_partition(fn: Callable, args: tuple, mesh: MeshSpec, *,
+                   kwargs: dict | None = None,
+                   hw: HardwareSpec = HardwareSpec(),
+                   mcts: MCTSConfig | None = None,
+                   min_dims: int = 10,
+                   logical_axes: list[tuple[str, ...]] | None = None,
+                   artifacts: ToastArtifacts | None = None) -> ShardingPlan:
+    """Run the full TOAST pipeline on ``fn(*args, **kwargs)``."""
+    t0 = time.perf_counter()
+    art = artifacts or analyze(fn, args, kwargs)
+    cm = CostModel(art.prog, art.nda, art.analysis, mesh, hw)
+    key = (mesh, min_dims)
+    actions = art.actions_by_mesh.get(key)
+    if actions is None:
+        actions = build_action_space(art.nda, art.analysis, mesh,
+                                     min_dims=min_dims)
+        art.actions_by_mesh[key] = actions
+    agent = MCTS(cm, actions, mcts or MCTSConfig())
+    result = agent.search()
+    elapsed = time.perf_counter() - t0
+
+    specs = _state_specs(cm, result.best_state, art.prog)
+    summary = art.nda.color_summary()
+    return ShardingPlan(
+        mesh=mesh,
+        in_specs=specs,
+        input_paths=art.prog.input_paths,
+        state=result.best_state,
+        cost=result.best_cost,
+        breakdown=cm.evaluate(result.best_state).as_dict(),
+        baseline_breakdown=cm.baseline().as_dict(),
+        constraint_specs=_constraint_specs(cm, result.best_state,
+                                           art.analysis),
+        logical_rules=_logical_rules(art.nda, art.prog, result.best_state,
+                                     logical_axes),
+        search_seconds=elapsed,
+        evaluations=result.evaluations,
+        num_colors=len(summary),
+        num_conflicts=len(art.analysis.conflicts),
+        num_compat_sets=len(art.analysis.compat_sets),
+        num_resolution_bits=art.analysis.num_resolution_bits,
+    )

@@ -1,0 +1,52 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+These are the entry points model code uses (``use_pallas=True`` paths):
+they adapt model-layout tensors (GQA grouping, (B,S,H,hd) layouts) to the
+kernels' (B,H,S,hd) layout, pick lane/MXU-aligned block sizes, and fall
+back to the jnp reference for shapes the kernels cannot tile.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rg_lru import rg_lru_scan
+
+
+def _pick_block(n: int, target: int) -> int:
+    b = min(target, n)
+    while n % b:
+        b -= 1
+    return max(b, 1)
+
+
+@partial(jax.jit, static_argnames=("causal", "interpret"))
+def gqa_flash_attention(q, k, v, *, causal: bool = True,
+                        interpret: bool = True):
+    """Model-layout attention: q (B,S,H,hd); k,v (B,T,KV,hd) — GQA groups
+    are expanded to full heads before entering the kernel."""
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    g = H // KV
+    qt = q.transpose(0, 2, 1, 3)                       # (B,H,S,hd)
+    kt = jnp.repeat(k.transpose(0, 2, 1, 3), g, axis=1)
+    vt = jnp.repeat(v.transpose(0, 2, 1, 3), g, axis=1)
+    bq = _pick_block(S, 128)
+    bk = _pick_block(T, 128)
+    out = flash_attention(qt, kt, vt, causal=causal, block_q=bq,
+                          block_k=bk, interpret=interpret)
+    return out.transpose(0, 2, 1, 3)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def rg_lru(a, b, *, interpret: bool = True):
+    """Gated linear recurrence h_t = a_t h_{t-1} + b_t; a, b: (B,S,R)."""
+    B, S, R = a.shape
+    br = _pick_block(R, 128)
+    bs = _pick_block(S, 256)
+    return rg_lru_scan(a, b, block_r=br, block_s=bs, interpret=interpret)

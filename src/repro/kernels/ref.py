@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def reference_attention(q, k, v, *, causal: bool = True,
+                        sm_scale: float | None = None):
+    """q: (B,H,S,hd); k,v: (B,H,T,hd)."""
+    hd = q.shape[-1]
+    sm_scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bhsd,bhtd->bhst", q, k).astype(jnp.float32) * sm_scale
+    if causal:
+        S, T = s.shape[-2:]
+        mask = jnp.arange(S)[:, None] >= jnp.arange(T)[None, :]
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", p.astype(v.dtype), v)
+
+
+def reference_rg_lru(a, b):
+    """h_t = a_t h_{t-1} + b_t via associative scan. a, b: (B, S, R)."""
+    a32, b32 = a.astype(jnp.float32), b.astype(jnp.float32)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a32, b32), axis=1)
+    return h.astype(a.dtype)

@@ -1,0 +1,74 @@
+"""RG-LRU linear-recurrence Pallas TPU kernel.
+
+Computes ``h_t = a_t * h_{t-1} + b_t`` (the Griffin/RecurrentGemma gated
+linear recurrence) for (B, S, R) gate/input tensors.
+
+TPU-native layout: the channel dimension R is tiled in VPU-lane-aligned
+blocks of 128; the sequence is tiled in chunks that stream HBM→VMEM along
+the minor-most grid dimension while the running hidden state ``h`` lives
+in a VMEM scratch carried across sequence chunks.  Within a chunk the
+recurrence runs as an in-VMEM ``fori_loop`` — the arithmetic-intensity-1
+inner step never touches HBM.
+
+(The pure-JAX model path uses an ``associative_scan``; this kernel is the
+single-pass alternative with 2x fewer HBM reads — see EXPERIMENTS.md.)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_R = 128
+DEFAULT_BLOCK_S = 256
+
+
+def _rglru_kernel(a_ref, b_ref, o_ref, h_scr, *, block_s: int):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    a = a_ref[0].astype(jnp.float32)               # (block_s, block_r)
+    b = b_ref[0].astype(jnp.float32)
+
+    def body(i, h):
+        h = a[i] * h + b[i]
+        o_ref[0, i, :] = h.astype(o_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, block_s, body, h_scr[...])
+    h_scr[...] = h
+
+
+def rg_lru_scan(a, b, *, block_r: int = DEFAULT_BLOCK_R,
+                block_s: int = DEFAULT_BLOCK_S, interpret: bool = True):
+    """a, b: (B, S, R) -> h: (B, S, R) with h_t = a_t h_{t-1} + b_t."""
+    B, S, R = a.shape
+    block_r = min(block_r, R)
+    block_s = min(block_s, S)
+    assert R % block_r == 0 and S % block_s == 0, (S, R, block_s, block_r)
+    ns, nr = S // block_s, R // block_r
+
+    kernel = functools.partial(_rglru_kernel, block_s=block_s)
+    return pl.pallas_call(
+        kernel,
+        # sequence chunks on the minor-most axis: h carries across them
+        grid=(B, nr, ns),
+        in_specs=[
+            pl.BlockSpec((1, block_s, block_r),
+                         lambda bi, ri, si: (bi, si, ri)),
+            pl.BlockSpec((1, block_s, block_r),
+                         lambda bi, ri, si: (bi, si, ri)),
+        ],
+        out_specs=pl.BlockSpec((1, block_s, block_r),
+                               lambda bi, ri, si: (bi, si, ri)),
+        out_shape=jax.ShapeDtypeStruct((B, S, R), a.dtype),
+        scratch_shapes=[pltpu.VMEM((block_r,), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

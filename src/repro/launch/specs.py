@@ -1,0 +1,163 @@
+"""Input specs (ShapeDtypeStruct stand-ins) and logical-name-based
+shardings for every (arch × shape) cell.
+
+``step_and_inputs`` builds the step function and its abstract inputs for a
+cell; ``tree_logical_axes`` assigns logical dim names to every leaf;
+``specs_from_rules`` turns ``{logical name -> mesh axes}`` rules into
+``PartitionSpec``s with divisibility validation.  Nothing here allocates
+device memory.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as T
+from repro.models.transformer import param_logical_axes
+from repro.train.steps import (make_decode_step, make_prefill_step,
+                               make_train_step, train_state_specs)
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """Abstract train/prefill batch with logical names."""
+    B, S = shape.global_batch, shape.seq_len
+    specs = {}
+    names = {}
+    if cfg.is_encoder_decoder:
+        S_enc, S_dec = S // 2, S // 2
+        specs["frames"] = sds((B, S_enc, cfg.d_model), jnp.float32)
+        names["frames"] = ("batch", "seq", "embed")
+        specs["tokens"] = sds((B, S_dec), jnp.int32)
+        names["tokens"] = ("batch", "seq")
+    elif cfg.frontend == "vision":
+        P = cfg.num_patches
+        specs["patch_embeds"] = sds((B, P, cfg.d_model), jnp.float32)
+        names["patch_embeds"] = ("batch", None, "embed")
+        specs["tokens"] = sds((B, S - P), jnp.int32)
+        names["tokens"] = ("batch", "seq")
+    else:
+        specs["tokens"] = sds((B, S), jnp.int32)
+        names["tokens"] = ("batch", "seq")
+    if shape.kind == "train":
+        specs["targets"] = jax.ShapeDtypeStruct(specs["tokens"].shape,
+                                                jnp.int32)
+        names["targets"] = names["tokens"]
+    return specs, names
+
+
+_CACHE_NAMES = {
+    "k": (None, "batch", "seq", "kv_heads", None),
+    "v": (None, "batch", "seq", "kv_heads", None),
+    "slot_pos": (None, None),
+    "h": (None, "batch", "rnn"),
+    "conv": (None, "batch", None, "rnn"),
+    "C": (None, "batch", "heads", None, None),
+    "n": (None, "batch", "heads", None),
+    "m": (None, "batch", "heads"),
+    "c": (None, "batch", "heads", None),
+}
+
+
+def _leaf_key(path):
+    last = path[-1]
+    return last.key if hasattr(last, "key") else str(last)
+
+
+def cache_logical_axes(cache):
+    def names(path, leaf):
+        base = _CACHE_NAMES.get(_leaf_key(path))
+        if base is None:
+            return (None,) * leaf.ndim
+        if len(base) > leaf.ndim:         # unstacked tail-layer cache
+            return base[len(base) - leaf.ndim:]
+        return base + (None,) * (leaf.ndim - len(base))
+    return jax.tree_util.tree_map_with_path(names, cache)
+
+
+def state_logical_axes(cfg, state):
+    from repro.optim.adam import AdamState
+    from repro.train.steps import TrainState
+    pax = param_logical_axes(cfg, state.params)
+    return TrainState(params=pax, opt=AdamState(step=None, m=pax, v=pax))
+
+
+def step_and_inputs(cfg: ModelConfig, shape: ShapeConfig):
+    """Returns (fn, args pytree of ShapeDtypeStruct, logical names pytree).
+
+    - train:   fn(state, batch) -> (state, metrics)
+    - prefill: fn(params, batch) -> last-token logits
+    - decode:  fn(params, cache, token, pos[, enc_out]) -> (logits, cache)
+    """
+    if shape.kind == "train":
+        fn = make_train_step(cfg)
+        state = train_state_specs(cfg)
+        bspecs, bnames = batch_specs(cfg, shape)
+        names_state = state_logical_axes(cfg, state)
+        return fn, (state, bspecs), (names_state, bnames)
+
+    params = T.param_specs(cfg)
+    pnames = param_logical_axes(cfg, params)
+
+    if shape.kind == "prefill":
+        fn = make_prefill_step(cfg)
+        bspecs, bnames = batch_specs(cfg, shape)
+        return fn, (params, bspecs), (pnames, bnames)
+
+    # decode: one new token against a seq_len-deep cache
+    B, S = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(lambda: T.init_cache(cfg, B, S))
+    cnames = cache_logical_axes(cache)
+    token = sds((B, 1), jnp.int32)
+    pos = sds((), jnp.int32)
+    dec = make_decode_step(cfg)
+    if cfg.is_encoder_decoder:
+        enc = sds((B, min(1500, S // 2), cfg.d_model), jnp.float32)
+
+        def fn(params, cache, token, pos, enc_out):
+            return dec(params, cache, token, pos, enc_out)
+
+        return fn, (params, cache, token, pos, enc), \
+            (pnames, cnames, ("batch", None), None,
+             ("batch", "seq", "embed"))
+
+    def fn(params, cache, token, pos):          # noqa: F811
+        return dec(params, cache, token, pos)
+
+    return fn, (params, cache, token, pos), \
+        (pnames, cnames, ("batch", None), None)
+
+
+def specs_from_rules(tree, names_tree, rules: dict[str, tuple[str, ...]],
+                     axis_sizes: dict[str, int]):
+    """PartitionSpecs for every leaf from logical-name rules, dropping axes
+    that do not divide the dim."""
+
+    def one(leaf, names):
+        if names is None:
+            names = (None,) * leaf.ndim
+        entries = []
+        used: set[str] = set()
+        for size, name in zip(leaf.shape, names):
+            axes = rules.get(name, ()) if name else ()
+            keep = []
+            for a in axes:
+                f = axis_sizes.get(a, 1)
+                if a in used or f <= 1 or size % f != 0:
+                    continue
+                keep.append(a)
+                used.add(a)
+                size //= f
+            entries.append(keep[0] if len(keep) == 1 else
+                           tuple(keep) if keep else None)
+        return PartitionSpec(*entries)
+
+    return jax.tree_util.tree_map(
+        one, tree, names_tree,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))

@@ -1,0 +1,103 @@
+"""Logical-axis sharding bridge.
+
+Models annotate activations with *logical dimension names* (``batch``,
+``seq``, ``embed``, ``hidden``, ``heads``, ``experts`` …).  A rules map
+``{logical name -> mesh axes}`` — produced by the TOAST plan
+(``plan.logical_rules``) or written by hand for the expert baselines —
+turns those annotations into ``with_sharding_constraint`` calls.  With no
+rules installed every annotation is a no-op, so the same model code runs
+unsharded on CPU and fully partitioned under a mesh.
+
+This is the JAX-idiomatic materialisation of the paper's flow: TOAST picks
+*which* named dimensions to shard; GSPMD propagation does the mechanics.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import PartitionSpec
+
+_STATE = threading.local()
+
+
+def set_rules(rules: dict[str, tuple[str, ...]] | None) -> None:
+    _STATE.rules = dict(rules) if rules else None
+
+
+def get_rules() -> dict[str, tuple[str, ...]] | None:
+    return getattr(_STATE, "rules", None)
+
+
+@contextlib.contextmanager
+def logical_rules(rules: dict[str, tuple[str, ...]] | None):
+    prev = get_rules()
+    set_rules(rules)
+    try:
+        yield
+    finally:
+        set_rules(prev)
+
+
+def spec_for(names: tuple[str | None, ...]) -> PartitionSpec | None:
+    rules = get_rules()
+    if not rules:
+        return None
+    entries = []
+    used: set[str] = set()
+    nontrivial = False
+    for n in names:
+        axes = rules.get(n) if n else None
+        if axes:
+            axes = tuple(a for a in axes if a not in used)
+        if axes:
+            used.update(axes)
+            entries.append(axes[0] if len(axes) == 1 else tuple(axes))
+            nontrivial = True
+        else:
+            entries.append(None)
+    return PartitionSpec(*entries) if nontrivial else None
+
+
+def constrain(x: jax.Array, names: tuple[str | None, ...]) -> jax.Array:
+    """Annotate ``x``'s dims with logical names; constrains sharding when
+    rules are installed and a mesh is active, else a no-op."""
+    spec = spec_for(names)
+    if spec is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, TypeError, RuntimeError):
+        return x
+
+
+# Expert/manual baseline rules (paper §5.1.1): FSDP + Megatron + sequence
+# parallelism for transformer LMs.
+MANUAL_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("data",),
+    "act_batch": ("data",),   # activation batch (cache batch is "batch")
+    "seq": ("model",),       # sequence parallelism for activations
+    "hidden": ("model",),    # Megatron MLP sharding
+    "heads": ("model",),     # Megatron attention-head sharding
+    "experts": ("model",),   # expert parallelism
+    "vocab": ("model",),
+    "embed_fsdp": ("data",),  # FSDP parameter sharding axis
+}
+
+MANUAL_RULES_MULTIPOD: dict[str, tuple[str, ...]] = {
+    **MANUAL_RULES,
+    "batch": ("pod", "data"),
+    "act_batch": ("pod", "data"),
+}
+
+# Weight-stationary decode (Pope et al. "Efficiently scaling transformer
+# inference"): keep 2D-sharded weights resident, reshard the tiny per-token
+# activations instead — activations drop the batch axis so their embed dim
+# can take "data" and contract against data-sharded weights locally.
+DECODE_WEIGHT_STATIONARY_RULES: dict[str, tuple[str, ...]] = {
+    **MANUAL_RULES,
+    "act_batch": (),
+    "embed": ("data",),
+}

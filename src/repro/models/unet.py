@@ -1,0 +1,142 @@
+"""U-Net (paper §5.1: 3.6B-parameter convolutional model).
+
+Residual down-sampling blocks, a multi-head attention bottleneck, and
+up-sampling blocks with skip connections — the diffusion-style U-Net the
+paper partitions.  Convolutions exercise the NDA's ``conv_general_dilated``
+rule (batch and channel colors); the skip connections create long-range
+def→use edges in the dimension graph.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _dense_init
+from repro.models.sharding import constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class UNetConfig:
+    in_channels: int = 4
+    base: int = 192
+    channel_mult: tuple[int, ...] = (1, 2, 3, 4)
+    img: int = 64
+    batch: int = 64
+    attn_heads: int = 32
+    dtype: str = "float32"
+
+
+def _conv_params(key, cin, cout, k, dtype):
+    return {"w": _dense_init(key, (k, k, cin, cout), dtype,
+                             scale=1.0 / (k * (cin ** 0.5))),
+            "b": jnp.zeros((cout,), dtype)}
+
+
+def _conv(p, x, stride=1):
+    out = jax.lax.conv_general_dilated(
+        x, p["w"], (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return out + p["b"]
+
+
+def _res_params(key, cin, cout, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"c1": _conv_params(k1, cin, cout, 3, dtype),
+            "c2": _conv_params(k2, cout, cout, 3, dtype),
+            "skip": _conv_params(k3, cin, cout, 1, dtype)}
+
+
+def _res(p, x):
+    h = jax.nn.silu(_conv(p["c1"], x))
+    h = _conv(p["c2"], h)
+    return h + _conv(p["skip"], x)
+
+
+def init_params(cfg: UNetConfig, key):
+    dt = jnp.dtype(cfg.dtype)
+    chans = [cfg.base * m for m in cfg.channel_mult]
+    ks = iter(jax.random.split(key, 64))
+    params = {"stem": _conv_params(next(ks), cfg.in_channels, chans[0], 3,
+                                   dt)}
+    down = []
+    cin = chans[0]
+    for c in chans:
+        down.append({"res": _res_params(next(ks), cin, c, dt),
+                     "down": _conv_params(next(ks), c, c, 3, dt)})
+        cin = c
+    params["down"] = down
+    mid_c = chans[-1]
+    params["mid_res1"] = _res_params(next(ks), mid_c, mid_c, dt)
+    params["attn"] = {
+        "wq": _dense_init(next(ks), (mid_c, mid_c), dt),
+        "wk": _dense_init(next(ks), (mid_c, mid_c), dt),
+        "wv": _dense_init(next(ks), (mid_c, mid_c), dt),
+        "wo": _dense_init(next(ks), (mid_c, mid_c), dt),
+    }
+    params["mid_res2"] = _res_params(next(ks), mid_c, mid_c, dt)
+    up = []
+    for c, skip_c in zip(reversed(chans), reversed(chans)):
+        up.append({"res": _res_params(next(ks), cin + skip_c, c, dt),
+                   "up": _conv_params(next(ks), c, c, 3, dt)})
+        cin = c
+    params["up"] = up
+    params["head"] = _conv_params(next(ks), cin, cfg.in_channels, 3, dt)
+    return params
+
+
+def _attention(cfg, p, x):
+    B, H, W, C = x.shape
+    hd = C // cfg.attn_heads
+    flat = x.reshape(B, H * W, C)
+    q = (flat @ p["wq"]).reshape(B, H * W, cfg.attn_heads, hd)
+    k = (flat @ p["wk"]).reshape(B, H * W, cfg.attn_heads, hd)
+    v = (flat @ p["wv"]).reshape(B, H * W, cfg.attn_heads, hd)
+    s = jnp.einsum("bshd,bthd->bhst", q, k) / (hd ** 0.5)
+    s = constrain(s, ("batch", "heads", None, None))
+    a = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(v.dtype)
+    o = jnp.einsum("bhst,bthd->bshd", a, v).reshape(B, H * W, C)
+    return x + (o @ p["wo"]).reshape(B, H, W, C)
+
+
+def forward(cfg: UNetConfig, params, x):
+    h = _conv(params["stem"], x)
+    h = constrain(h, ("batch", None, None, "channels"))
+    skips = []
+    for blk in params["down"]:
+        h = _res(blk["res"], h)
+        skips.append(h)
+        h = jax.nn.silu(_conv(blk["down"], h, stride=2))
+    h = _res(params["mid_res1"], h)
+    h = _attention(cfg, params["attn"], h)
+    h = _res(params["mid_res2"], h)
+    for blk, skip in zip(params["up"], reversed(skips)):
+        B, H, W, C = h.shape
+        h = jax.image.resize(h, (B, H * 2, W * 2, C), "nearest")
+        h = jnp.concatenate([h, skip], axis=-1)
+        h = _res(blk["res"], h)
+        h = jax.nn.silu(_conv(blk["up"], h))
+    return _conv(params["head"], h)
+
+
+def make_train_step(cfg: UNetConfig):
+    def loss_fn(params, batch):
+        pred = forward(cfg, params, batch["x"])
+        return jnp.mean(jnp.square(pred - batch["eps"]))
+
+    def train_step(params, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        new = jax.tree_util.tree_map(lambda p, g: p - 1e-4 * g, params,
+                                     grads)
+        return new, loss
+
+    return train_step
+
+
+def input_specs(cfg: UNetConfig):
+    dt = jnp.dtype(cfg.dtype)
+    shp = (cfg.batch, cfg.img, cfg.img, cfg.in_channels)
+    return {"x": jax.ShapeDtypeStruct(shp, dt),
+            "eps": jax.ShapeDtypeStruct(shp, dt)}

@@ -1,0 +1,81 @@
+"""Gradient compression for the slow (cross-pod / DCN) hop.
+
+Two standard schemes, both with **error feedback** (the residual of what
+compression dropped is added back into the next step's gradient, which is
+what makes aggressive compression converge):
+
+- ``topk``: keep the k largest-magnitude entries per leaf.
+- ``int8``: per-leaf symmetric linear quantisation.
+
+At scale these run *between* the in-pod reduce-scatter (full precision,
+fast ICI) and the cross-pod all-reduce (slow DCN): each pod reduces
+locally, compresses once, and exchanges ~1-3% of the bytes across DCN.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressionState(NamedTuple):
+    error: Any                       # error-feedback residual per leaf
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    scheme: str = "topk"             # "topk" | "int8" | "none"
+    topk_ratio: float = 0.02
+
+
+def init(params) -> CompressionState:
+    return CompressionState(error=jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def _topk_leaf(g, ratio):
+    flat = g.reshape(-1)
+    k = max(1, int(flat.size * ratio))
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    vals = flat[idx]
+    comp = jnp.zeros_like(flat).at[idx].set(vals)
+    return comp.reshape(g.shape)
+
+
+def _int8_leaf(g):
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q.astype(jnp.float32) * scale
+
+
+def compress(cfg: CompressionConfig, state: CompressionState, grads):
+    """Returns (decompressed grads as seen by the receiver, new state).
+
+    The compression is simulated end-to-end (compress→decompress) so the
+    training numerics are exactly what a DCN deployment would see, while
+    ``compressed_bytes`` reports the wire size.
+    """
+    if cfg.scheme == "none":
+        return grads, state, 1.0
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        if cfg.scheme == "topk":
+            sent = _topk_leaf(g32, cfg.topk_ratio)
+        elif cfg.scheme == "int8":
+            sent = _int8_leaf(g32)
+        else:
+            raise ValueError(cfg.scheme)
+        return sent.astype(g.dtype), g32 - sent
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_e = jax.tree_util.tree_leaves(state.error)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    new_g = jax.tree_util.tree_unflatten(tdef, [o[0] for o in outs])
+    new_e = jax.tree_util.tree_unflatten(tdef, [o[1] for o in outs])
+    ratio = {"topk": cfg.topk_ratio * 2,     # values + indices
+             "int8": 0.25}[cfg.scheme]
+    return new_g, CompressionState(new_e), ratio

@@ -1,0 +1,74 @@
+"""Benchmark-harness behaviour tests (fast variants only)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from benchmarks import common
+from repro.core.cost_model import HardwareSpec, MeshSpec
+from repro.core.mcts import MCTSConfig
+
+MESH = MeshSpec(("data", "model"), (8, 4))
+HW = HardwareSpec()
+FAST = MCTSConfig(rounds=3, trajectories_per_round=12)
+
+
+@pytest.fixture(scope="module")
+def itx_art():
+    return common.artifacts_for("itx", seq=1024, batch=8)
+
+
+class TestVariants:
+    def test_unsharded_is_baseline(self, itx_art):
+        art, names = itx_art
+        r = common.run_variant("unsharded", art, names, MESH, HW)
+        assert r.cost >= 1.0          # RT=1 (+ MP if over budget)
+
+    def test_manual_beats_unsharded(self, itx_art):
+        art, names = itx_art
+        u = common.run_variant("unsharded", art, names, MESH, HW)
+        m = common.run_variant("manual", art, names, MESH, HW)
+        assert m.runtime_est < u.runtime_est
+
+    def test_toast_beats_unsharded(self, itx_art):
+        art, names = itx_art
+        t = common.run_variant("toast", art, names, MESH, HW, mcts_cfg=FAST)
+        assert t.cost < 1.0
+        assert t.evaluations > 0
+
+    def test_automap_subspace_of_toast(self, itx_art):
+        """AutoMap-like actions never include conflict-resolution bits."""
+        art, names = itx_art
+        from repro.core.actions import build_action_space
+        allowed = common._input_colors(art)
+        toast_actions = build_action_space(art.nda, art.analysis, MESH)
+        am = [a for a in toast_actions if a.color in allowed]
+        assert len(am) <= len(toast_actions)
+
+    def test_paper_models_trace(self):
+        for model in ("gns", "unet"):
+            art, names = common.artifacts_for(model)
+            assert len(art.prog.ops) > 50
+            assert len(names) == len(art.prog.inputs)
+
+
+class TestPaperModelConfigs:
+    def test_t2b_matches_paper_table(self):
+        c = common.T2B
+        assert (c.d_model, c.num_layers, c.d_ff, c.num_heads,
+                c.head_dim, c.vocab_size) == \
+            (2048, 18, 32768, 8, 256, 256128)
+
+    def test_t7b_matches_paper_table(self):
+        c = common.T7B
+        assert (c.d_model, c.num_layers, c.d_ff, c.num_heads,
+                c.head_dim, c.vocab_size) == \
+            (3072, 28, 49152, 16, 256, 256128)
+
+    def test_transformer_resolution_bits_constant_in_depth(self):
+        """Paper §3.6: resolutions don't grow with layer count (scan-over-
+        layers: both T2B (18L) and T7B (28L) have the same few bits)."""
+        a2, _ = common.artifacts_for("t2b")
+        a7, _ = common.artifacts_for("t7b")
+        assert a2.analysis.num_resolution_bits == \
+            a7.analysis.num_resolution_bits <= 4

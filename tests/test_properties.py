@@ -1,0 +1,145 @@
+"""Property-based tests (hypothesis) on system invariants.
+
+Random small tensor programs are generated from a pool of layer-like
+combinators; for each, the NDA / conflict / cost-model invariants that the
+whole system rests on must hold:
+
+- colors partition all dimension-name nodes (union-find well-formedness);
+- a conflict's two groups are distinct but share a color;
+- a compatibility set's two resolutions choose disjoint group sets;
+- sharding a color never *increases* modeled FLOPs, and pure batch
+  sharding adds no communication;
+- canonical states are action-order independent.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.conflicts import analyze_conflicts
+from repro.core.cost_model import CostModel, MeshSpec, ShardingState
+from repro.core.ir import extract_program
+from repro.core.nda import run_nda
+
+
+def sh(*s):
+    return jax.ShapeDtypeStruct(s, jnp.float32)
+
+
+def build_program(ops_choice, B=64, D=32, H=48):
+    """A random straight-line model from composable pieces."""
+
+    def fn(x, w1, w2):
+        h = x @ w1                                     # (B, H)
+        for kind in ops_choice:
+            if kind == "relu":
+                h = jax.nn.relu(h)
+            elif kind == "norm":
+                h = h / (jnp.sum(h * h, axis=-1, keepdims=True) + 1.0)
+            elif kind == "residual":
+                h = h + jnp.tanh(h)
+            elif kind == "gram":
+                g = jax.nn.softmax(h @ h.T, axis=-1)   # (B, B) conflict!
+                h = g @ h
+            elif kind == "square":
+                h = h * h
+        return h @ w2
+
+    args = (sh(B, D), sh(D, H), sh(H, D))
+    return fn, args
+
+
+OPS = st.lists(st.sampled_from(["relu", "norm", "residual", "gram",
+                                "square"]), min_size=1, max_size=5)
+MESH = MeshSpec(("a", "b"), (4, 4))
+
+
+@settings(max_examples=20, deadline=None)
+@given(ops=OPS)
+def test_nda_invariants(ops):
+    fn, args = build_program(ops)
+    prog = extract_program(fn, *args)
+    nda = run_nda(prog)
+    # every def-site dim belongs to exactly one color and one group,
+    # and groups refine colors
+    for site in nda.all_sites():
+        for n in site.dims:
+            g, c = nda.group(n), nda.color(n)
+            assert nda.uf_im.find(g) == c       # group ⊆ color
+
+
+@settings(max_examples=20, deadline=None)
+@given(ops=OPS)
+def test_conflict_invariants(ops):
+    fn, args = build_program(ops)
+    prog = extract_program(fn, *args)
+    nda = run_nda(prog)
+    ca = analyze_conflicts(nda)
+    if "gram" in ops:
+        assert ca.conflicts, "h @ h.T must conflict"
+    for c in ca.conflicts:
+        assert c.group_a != c.group_b
+        assert nda.uf_im.find(c.group_a) == c.color
+        assert nda.uf_im.find(c.group_b) == c.color
+    if ca.num_resolution_bits:
+        r0 = ca.resolution_groups(0)
+        r1 = ca.resolution_groups((1 << ca.num_resolution_bits) - 1)
+        assert not (r0 & r1)
+
+
+@settings(max_examples=15, deadline=None)
+@given(ops=OPS)
+def test_batch_sharding_free_lunch(ops):
+    """Sharding the batch color divides FLOPs and costs no communication."""
+    fn, args = build_program(ops)
+    prog = extract_program(fn, *args)
+    nda = run_nda(prog)
+    ca = analyze_conflicts(nda)
+    cm = CostModel(prog, nda, ca, MESH)
+    B_color = nda.colors_of_value(prog.inputs[0])[0]
+    s = ShardingState().with_action(B_color, "a", ())
+    bd = cm.evaluate(s)
+    base = cm.baseline()
+    assert bd.flops <= base.flops
+    if "gram" not in ops:             # conflicts may force resharding
+        assert bd.collective_time == 0.0
+        assert bd.flops == pytest.approx(base.flops / 4, rel=0.05)
+
+
+@settings(max_examples=15, deadline=None)
+@given(ops=OPS, seed=st.integers(0, 2 ** 16))
+def test_state_order_independence(ops, seed):
+    import random
+    rng = random.Random(seed)
+    fn, args = build_program(ops)
+    prog = extract_program(fn, *args)
+    nda = run_nda(prog)
+    cols = list({nda.color(n) for v in prog.inputs
+                 for n in nda.def_site[v].dims})[:3]
+    # one action per color: axis order *within* one color is semantic
+    # (PartitionSpec(("a","b")) != (("b","a"))), so order-independence is
+    # claimed across distinct colors only — as in the paper's state.
+    axes = ("a", "b")
+    picks = [(c, axes[i % 2]) for i, c in enumerate(cols)]
+    rng.shuffle(picks)
+    s1 = ShardingState()
+    for c, a in picks:
+        s1 = s1.with_action(c, a, ())
+    s2 = ShardingState()
+    for c, a in reversed(picks):
+        s2 = s2.with_action(c, a, ())
+    assert s1 == s2
+
+
+@settings(max_examples=10, deadline=None)
+@given(ops=OPS)
+def test_cost_model_peak_positive_and_bounded(ops):
+    fn, args = build_program(ops)
+    prog = extract_program(fn, *args)
+    nda = run_nda(prog)
+    ca = analyze_conflicts(nda)
+    cm = CostModel(prog, nda, ca, MESH)
+    base = cm.baseline()
+    total_bytes = sum(t.nbytes for t in prog.types.values())
+    assert 0 < base.peak_bytes <= total_bytes
