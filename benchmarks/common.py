@@ -14,9 +14,11 @@ from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core.actions import Action, build_action_space, valid_actions
 from repro.core.cost_model import (CostModel, HardwareSpec, MeshSpec,
                                    ShardingState)
+from repro.core.evaluator import IncrementalEvaluator
 from repro.core.mcts import MCTS, MCTSConfig
 from repro.core.partitioner import (ToastArtifacts, analyze,
                                     flatten_logical_axes)
+from repro.core.search import get_backend
 from repro.launch.specs import step_and_inputs
 from repro.models import gns, unet
 
@@ -124,7 +126,8 @@ def state_from_rules(art: ToastArtifacts, logical_axes,
 def run_variant(name: str, art: ToastArtifacts, logical_axes,
                 mesh: MeshSpec, hw: HardwareSpec,
                 mcts_cfg: MCTSConfig | None = None,
-                min_dims: int = 10) -> VariantResult:
+                min_dims: int = 10,
+                backend: str = "mcts") -> VariantResult:
     cm = CostModel(art.prog, art.nda, art.analysis, mesh, hw)
     t0 = time.perf_counter()
     evals = 0
@@ -142,8 +145,9 @@ def run_variant(name: str, art: ToastArtifacts, logical_axes,
     elif name == "toast":
         actions = build_action_space(art.nda, art.analysis, mesh,
                                      min_dims=min_dims)
-        agent = MCTS(cm, actions, mcts_cfg or MCTSConfig())
-        res = agent.search()
+        engine = get_backend(backend)
+        cfg = mcts_cfg if engine.name == "mcts" else None
+        res = engine.search(IncrementalEvaluator(cm), actions, cfg)
         state, evals = res.best_state, res.evaluations
     elif name == "automap":
         # AutoMap-like: shardings only issued on function *arguments* (no

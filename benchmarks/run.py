@@ -11,6 +11,8 @@ Sections:
 - fig9:   auto-sharding search time (wall-clock) + cost-model evaluations.
 - fig10:  T2B sequence-length and device scaling.
 - nda:    static-analysis latency per model (scalability claim §5.3).
+- search: cost-evaluation throughput, dense seed path vs the incremental
+          engine (writes BENCH_search.json) — scalability claim §5.3.
 - kernels: Pallas kernel microbenchmarks (interpret mode) vs jnp oracle.
 """
 
@@ -108,8 +110,10 @@ def kernel_micro():
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--section", default="all",
-                    choices=["all", "fig8", "fig10", "nda", "kernels"])
+                    choices=["all", "fig8", "fig10", "nda", "search",
+                             "kernels"])
     ap.add_argument("--models", default=",".join(MODELS))
+    ap.add_argument("--search-out", default="BENCH_search.json")
     args = ap.parse_args()
     models = tuple(args.models.split(","))
     print("name,us_per_call,derived")
@@ -119,6 +123,9 @@ def main() -> None:
         fig10_scaling()
     if args.section in ("all", "nda"):
         nda_latency()
+    if args.section in ("all", "search"):
+        from benchmarks import search_throughput
+        search_throughput.run(out=args.search_out)
     if args.section in ("all", "kernels"):
         kernel_micro()
 

@@ -28,6 +28,10 @@ class Action:
     def apply(self, state: ShardingState) -> ShardingState:
         return state.with_action(self.color, self.axis, self.bit_choices)
 
+    @property
+    def is_stop(self) -> bool:
+        return self.color < 0
+
 
 STOP = Action(color=-1, axis="", bit_choices=())
 
@@ -70,11 +74,13 @@ def valid_actions(actions: list[Action], state: ShardingState) -> list[Action]:
     per-tensor clashes are rejected by the cost model's site validation."""
     ca, bits = state.as_dicts()
     out = []
+    bits_get = bits.get
     for a in actions:
         if a.axis in ca.get(a.color, ()):
             continue                      # duplicate (color, axis)
         # resolution bits already fixed differently -> invalid duplicate
-        if any(bits.get(sg, b) != b for sg, b in a.bit_choices):
+        if a.bit_choices and any(bits_get(sg, b) != b
+                                 for sg, b in a.bit_choices):
             continue
         out.append(a)
     return out

@@ -1,4 +1,4 @@
-"""Analytical cost model (paper §4.5).
+"""Analytical cost model (paper §4.5) with precomputed static tables.
 
 An abstract interpreter over the extracted Program that, given a sharding
 state (color→axes assignment + conflict resolution bits), estimates:
@@ -12,6 +12,18 @@ state (color→axes assignment + conflict resolution bits), estimates:
 The MCTS consumes *relative* cost: C(s) = RT(s) + MP(s), with
 RT = runtime(s)/runtime(unsharded) and MP a penalty only above the
 per-device memory budget — exactly the paper's formulation.
+
+Fast and scalable (paper §5.3): ``__init__`` builds, once per
+``(Program, MeshSpec)``, a static op-cost table — per-op site color/group/
+size tuples, operand/result byte counts, base (unsharded) cost rows, and
+color→op / group→op dependency sets — plus vectorized numpy live-range
+tables.  ``evaluate`` then only re-costs the ops and values whose sites are
+touched by the state's colors and resolution bits (diff-from-base); peak
+memory is a scatter-add + cumsum over precomputed live intervals instead of
+a per-op python live-set walk.  The original exhaustive interpreter is kept
+verbatim as ``evaluate_dense`` — the exactness oracle and the "seed path"
+baseline of ``benchmarks/search_throughput.py``.  Single-action deltas on
+top of a parent state live in ``repro.core.evaluator``.
 
 Hardware constants default to TPU v5e (197 TFLOP/s bf16, 819 GB/s HBM,
 ~50 GB/s/link ICI) per the assignment's roofline spec.
@@ -98,6 +110,11 @@ class CostBreakdown:
 
 _MATMUL_PRIMS = {"dot_general", "conv_general_dilated"}
 
+# a cost row is (compute_time, memory_time, collective_time, flops,
+# comm_bytes) — the per-op contribution to the breakdown totals.
+_ROW_FIELDS = 5
+_EMPTY = frozenset()
+
 
 class CostModel:
     def __init__(self, prog: Program, nda: NDAResult,
@@ -120,6 +137,121 @@ class CostModel:
         self._baseline: CostBreakdown | None = None
         # cache: state -> cost breakdown
         self._cache: dict[ShardingState, CostBreakdown] = {}
+        # cache: bits tuple -> frozenset of suppressed groups
+        self._suppressed_cache: dict[tuple, frozenset] = {}
+        self._axis_size = dict(zip(mesh.axes, mesh.sizes))
+        self._build_static_tables()
+
+    # -- static tables (built once per Program × MeshSpec) -------------------
+
+    def _site_info(self, site):
+        """Precompute (colors, groups, sizes) per dim of a site, so the hot
+        path never touches the union-find."""
+        return (tuple(self.nda.color(n) for n in site.dims),
+                tuple(self.nda.group(n) for n in site.dims),
+                tuple(self.nda.node_sizes.get(n, 0) for n in site.dims))
+
+    def _build_static_tables(self) -> None:
+        prog = self.prog
+        n_ops = len(prog.ops)
+        # per-op cost spec: (op, trip, use_infos, reshard_def_infos,
+        #                    out_infos, operand_nbytes, result_nbytes)
+        self._op_specs = []
+        color_ops: dict[int, set[int]] = defaultdict(set)
+        group_ops: dict[int, set[int]] = defaultdict(set)
+        for op_idx, op in enumerate(prog.ops):
+            uses, reshard = [], []
+            infos = []
+            for slot, vid in enumerate(op.operands):
+                usite = self.use_site.get((op_idx, slot))
+                if usite is None:
+                    uses.append(None)
+                    reshard.append(None)
+                    continue
+                uinfo = self._site_info(usite)
+                uses.append(uinfo)
+                infos.append(uinfo)
+                dsite = self.nda.def_site.get(vid)
+                if dsite is None or len(dsite.dims) != len(usite.dims):
+                    reshard.append(None)
+                else:
+                    dinfo = self._site_info(dsite)
+                    reshard.append(dinfo)
+                    infos.append(dinfo)
+            outs = []
+            for r in op.results:
+                oinfo = self._site_info(self.nda.def_site[r])
+                outs.append(oinfo)
+                infos.append(oinfo)
+            self._op_specs.append((
+                op, prog.trip_counts.get(op_idx, 1), uses, reshard, outs,
+                tuple(prog.types[v].nbytes for v in op.operands),
+                tuple(prog.types[r].nbytes for r in op.results)))
+            for colors, groups, _ in infos:
+                for c in colors:
+                    color_ops[c].add(op_idx)
+                for g in groups:
+                    group_ops[g].add(op_idx)
+        self._color_ops = {c: frozenset(s) for c, s in color_ops.items()}
+        self._group_ops = {g: frozenset(s) for g, s in group_ops.items()}
+
+        # supergroup index -> groups whose suppression its bit can flip
+        self._sg_groups: list[frozenset[int]] = []
+        for sg in self.analysis.supergroups:
+            gs: set[int] = set()
+            for sid in sg:
+                cs = self.analysis.compat_sets[sid]
+                for c in cs.conflicts:
+                    s0, s1 = cs.sides[c.cid]
+                    gs.add(s0)
+                    gs.add(s1)
+            self._sg_groups.append(frozenset(gs))
+
+        # live-range tables over inputs + op results (position p=0 is the
+        # initial input set; p=i+1 is "after op i, before dead-operand
+        # frees" — exactly where the dense interpreter samples the peak).
+        outputs = set(prog.outputs)
+        vids: list[int] = list(prog.inputs)
+        starts: list[int] = [0] * len(prog.inputs)
+        for i, op in enumerate(prog.ops):
+            for r in op.results:
+                vids.append(r)
+                starts.append(i + 1)
+        ends = [n_ops if (v in outputs or v not in self.last_use)
+                else self.last_use[v] + 1 for v in vids]
+        self._live_vids = vids
+        self._vid_slot = {v: k for k, v in enumerate(vids)}
+        self._live_start = np.asarray(starts, dtype=np.int64)
+        self._live_end = np.asarray(ends, dtype=np.int64)
+        self._val_info = {v: self._site_info(self.nda.def_site[v])
+                          for v in vids}
+        color_vals: dict[int, set[int]] = defaultdict(set)
+        group_vals: dict[int, set[int]] = defaultdict(set)
+        for v, (colors, groups, _) in self._val_info.items():
+            for c in colors:
+                color_vals[c].add(v)
+            for g in groups:
+                group_vals[g].add(v)
+        self._color_vals = {c: frozenset(s) for c, s in color_vals.items()}
+        self._group_vals = {g: frozenset(s) for g, s in group_vals.items()}
+
+        self._base_val_bytes = np.asarray(
+            [float(prog.types[v].nbytes) for v in vids])
+        self._base_delta = np.zeros(n_ops + 2)
+        np.add.at(self._base_delta, self._live_start, self._base_val_bytes)
+        np.add.at(self._base_delta, self._live_end + 1,
+                  -self._base_val_bytes)
+        self._base_peak = float(
+            self._base_delta.cumsum()[:n_ops + 1].max()) if vids else 0.0
+
+        # unsharded per-op cost rows and their totals
+        self.base_rows = [self.op_cost_row(i, {}, _EMPTY)
+                          for i in range(n_ops)]
+        totals = [0.0] * _ROW_FIELDS
+        for row in self.base_rows:
+            for k in range(_ROW_FIELDS):
+                totals[k] += row[k]
+        self._base_totals = tuple(totals)
 
     # -- sharding resolution ------------------------------------------------
 
@@ -136,25 +268,38 @@ class CostModel:
                     suppressed.add(s0 if bit else s1)
         return chosen, suppressed - chosen
 
+    def suppressed_for(self, bits) -> frozenset:
+        """Memoized suppressed-group set for a bits assignment (dict or the
+        canonical ``ShardingState.bits`` tuple)."""
+        key = tuple(sorted(bits.items())) if isinstance(bits, dict) \
+            else tuple(bits)
+        hit = self._suppressed_cache.get(key)
+        if hit is None:
+            _, sup = self._chosen_suppressed(dict(key))
+            hit = frozenset(sup)
+            self._suppressed_cache[key] = hit
+        return hit
+
     def site_axes(self, site, color_axes: dict, suppressed: set[int]
                   ) -> list[tuple[str, ...]]:
         """Mesh axes sharding each dim of a site, conflict-resolved and
         validated (an axis shards at most one dim; divisibility holds)."""
+        return self._site_axes_info(self._site_info(site), color_axes,
+                                    suppressed)
+
+    def _site_axes_info(self, info, color_axes: dict, suppressed
+                        ) -> list[tuple[str, ...]]:
+        colors, groups, sizes = info
         out: list[tuple[str, ...]] = []
         seen_axes: set[str] = set()
-        for i, n in enumerate(site.dims):
-            color = self.nda.color(n)
+        for color, grp, size in zip(colors, groups, sizes):
             axes = color_axes.get(color, ())
-            if not axes:
-                out.append(())
-                continue
-            if self.nda.group(n) in suppressed:
+            if not axes or grp in suppressed:
                 out.append(())
                 continue
             ok: list[str] = []
-            size = self.nda.node_sizes.get(n, 0)
             for a in axes:
-                f = self.mesh.size(a)
+                f = self._axis_size[a]
                 if a in seen_axes or size % f != 0 or size < f:
                     continue
                 ok.append(a)
@@ -167,7 +312,7 @@ class CostModel:
         f = 1
         for axes in axes_per_dim:
             for a in axes:
-                f *= self.mesh.size(a)
+                f *= self._axis_size[a]
         return f
 
     def _axis_bw(self, axis: str) -> float:
@@ -178,7 +323,7 @@ class CostModel:
         """Time for a collective over the given mesh axes."""
         t = 0.0
         for a in axes:
-            n = self.mesh.size(a)
+            n = self._axis_size[a]
             if n <= 1:
                 continue
             bw = self._axis_bw(a)
@@ -190,11 +335,138 @@ class CostModel:
                 t += (n - 1) / (n * n) * full_bytes / bw
         return t
 
+    # -- per-op / per-value costing ------------------------------------------
+
+    def op_cost_row(self, op_idx: int, color_axes: dict, suppressed
+                    ) -> tuple[float, float, float, float, float]:
+        """Contribution of one op to the breakdown totals under a sharding:
+        (compute_time, memory_time, collective_time, flops, comm_bytes)."""
+        op, trip, uses, reshard, outs, opnb, resnb = self._op_specs[op_idx]
+        coll = 0.0
+        comm = 0.0
+        use_axes = []
+        for slot, vid in enumerate(op.operands):
+            uinfo = uses[slot]
+            if uinfo is None:
+                use_axes.append(())
+                continue
+            ua = self._site_axes_info(uinfo, color_axes, suppressed)
+            use_axes.append(ua)
+            dinfo = reshard[slot]
+            if dinfo is None:
+                continue
+            da = self._site_axes_info(dinfo, color_axes, suppressed)
+            t, b = self._reshard_cost(vid, da, ua, trip)
+            coll += t
+            comm += b
+        out_axes = [self._site_axes_info(i, color_axes, suppressed)
+                    for i in outs]
+        flops, contract_axes = self._op_flops(op, use_axes, out_axes)
+        bytes_moved = sum(nb / self._factor(a)
+                          for nb, a in zip(opnb, use_axes)) + \
+            sum(nb / self._factor(a) for nb, a in zip(resnb, out_axes))
+        t_comp = flops / self.hw.flops_per_chip
+        t_mem = bytes_moved / self.hw.hbm_bw
+        if contract_axes:
+            out_local = sum(nb / self._factor(a)
+                            for nb, a in zip(resnb, out_axes))
+            coll += self._collective("all_reduce", out_local,
+                                     contract_axes) * trip
+            comm += out_local * 2 * trip
+        return (max(t_comp, t_mem) * trip, t_mem * trip, coll,
+                flops * trip, comm)
+
+    def value_local_bytes(self, vid: int, color_axes: dict,
+                          suppressed) -> float:
+        info = self._val_info.get(vid)
+        if info is None:
+            info = self._site_info(self.nda.def_site[vid])
+        axes = self._site_axes_info(info, color_axes, suppressed)
+        return self.prog.types[vid].nbytes / self._factor(axes)
+
+    def peak_with_overrides(self, vbytes: dict[int, float]) -> float:
+        """Peak live bytes for a state given only the values whose local
+        bytes differ from the unsharded base (vectorized live ranges)."""
+        if not vbytes:
+            return self._base_peak
+        delta = self._base_delta.copy()
+        start, end = self._live_start, self._live_end
+        slot = self._vid_slot
+        base = self._base_val_bytes
+        for vid, nb in vbytes.items():
+            k = slot[vid]
+            db = nb - base[k]
+            delta[start[k]] += db
+            delta[end[k] + 1] -= db
+        return float(delta.cumsum()[:len(self.prog.ops) + 1].max())
+
+    # -- dirty-set computation ----------------------------------------------
+
+    def dirty_sets(self, colors, supergroups
+                   ) -> tuple[frozenset[int], frozenset[int]]:
+        """(op indices, value ids) whose cost can change when the given
+        colors gain an axis / the given supergroup bits flip from default."""
+        ops: set[int] = set()
+        vals: set[int] = set()
+        for c in colors:
+            ops |= self._color_ops.get(c, _EMPTY)
+            vals |= self._color_vals.get(c, _EMPTY)
+        for gi in supergroups:
+            for g in self._sg_groups[gi]:
+                ops |= self._group_ops.get(g, _EMPTY)
+                vals |= self._group_vals.get(g, _EMPTY)
+        return frozenset(ops), frozenset(vals)
+
+    def state_dirty_sets(self, state: ShardingState):
+        """Dirty sets of a whole state relative to the unsharded base.
+        Bits still at their default (0) change nothing vs. base."""
+        return self.dirty_sets((c for c, _ in state.color_axes),
+                               (sg for sg, b in state.bits if b))
+
     # -- evaluation ----------------------------------------------------------
 
     def evaluate(self, state: ShardingState) -> CostBreakdown:
-        if state in self._cache:
-            return self._cache[state]
+        bd = self._cache.get(state)
+        if bd is None:
+            bd, _, _, _ = self.evaluate_with_diff(state)
+            self._cache[state] = bd
+        return bd
+
+    def evaluate_with_diff(self, state: ShardingState
+                           ) -> tuple[CostBreakdown, dict, dict, int]:
+        """Diff-from-base evaluation: re-cost only ops/values touched by the
+        state.  Returns (breakdown, {op: row != base}, {vid: bytes != base},
+        number of rows re-costed) — the record the incremental evaluator
+        chains from."""
+        color_axes, _ = state.as_dicts()
+        suppressed = self.suppressed_for(state.bits)
+        dirty_ops, dirty_vals = self.state_dirty_sets(state)
+        totals = list(self._base_totals)
+        rows: dict[int, tuple] = {}
+        for i in dirty_ops:
+            new = self.op_cost_row(i, color_axes, suppressed)
+            old = self.base_rows[i]
+            if new != old:
+                rows[i] = new
+                for k in range(_ROW_FIELDS):
+                    totals[k] += new[k] - old[k]
+        vbytes: dict[int, float] = {}
+        base = self._base_val_bytes
+        slot = self._vid_slot
+        for vid in dirty_vals:
+            nb = self.value_local_bytes(vid, color_axes, suppressed)
+            if nb != base[slot[vid]]:
+                vbytes[vid] = nb
+        peak = self.peak_with_overrides(vbytes)
+        bd = CostBreakdown(totals[0], totals[1], totals[2], peak,
+                           totals[3], totals[4])
+        return bd, rows, vbytes, len(dirty_ops)
+
+    def evaluate_dense(self, state: ShardingState) -> CostBreakdown:
+        """The original exhaustive abstract interpretation — every op
+        re-costed, python live-set walk.  Kept as the exactness oracle for
+        the incremental engine and as the seed-path benchmark baseline.
+        Deliberately uncached."""
         color_axes, bits = state.as_dicts()
         _, suppressed = self._chosen_suppressed(bits)
         bd = CostBreakdown()
@@ -262,7 +534,6 @@ class CostModel:
                     live.pop(vid, None)
 
         bd.peak_bytes = peak
-        self._cache[state] = bd
         return bd
 
     def _reshard_cost(self, vid: int, da, ua, trip: int):
@@ -284,7 +555,7 @@ class CostModel:
         for a in moved:        # axis moved between dims -> all_to_all
             local = nbytes / self._factor(da)
             t += self._collective("all_to_all", local, [a])
-            b += local / self.mesh.size(a)
+            b += local / self._axis_size[a]
             gathered.remove(a)
         if gathered:           # remaining: all_gather
             within = nbytes / self._factor(
@@ -310,7 +581,7 @@ class CostModel:
                     if i < len(use_axes[0]):
                         for a in use_axes[0][i]:
                             contract_axes.append(a)
-                            factor *= self.mesh.size(a)
+                            factor *= self._axis_size[a]
             return full / factor, contract_axes
         if op.prim == "conv_general_dilated":
             out_t = self.prog.types[op.results[0]]
@@ -338,10 +609,9 @@ class CostModel:
             self._baseline = self.evaluate(ShardingState())
         return self._baseline
 
-    def paper_cost(self, state: ShardingState) -> float:
-        """C(s) = RT(s) + MP(s) — paper §4.5."""
+    def cost_from_breakdown(self, bd: CostBreakdown) -> float:
+        """C(s) = RT(s) + MP(s) — paper §4.5 — from a breakdown."""
         base = self.baseline()
-        bd = self.evaluate(state)
         rt = bd.runtime / max(base.runtime, 1e-12)
         dm = self.hw.hbm_per_chip
         if bd.peak_bytes > dm:
@@ -350,3 +620,7 @@ class CostModel:
         else:
             mp = 0.0
         return rt + mp
+
+    def paper_cost(self, state: ShardingState) -> float:
+        """C(s) = RT(s) + MP(s) — paper §4.5."""
+        return self.cost_from_breakdown(self.evaluate(state))

@@ -12,6 +12,11 @@ Faithful to the paper's adaptations of standard UCT:
   length so shorter action sequences with equal cost are preferred (§4.1).
 - Trajectories end on a explicit *stop* action or at ``max_depth`` (30 in
   the paper).
+
+Evaluation runs through ``IncrementalEvaluator``: every action application
+during tree walk and playout costs the child *incrementally* from its
+parent's record, and repeated prefix states hit the transposition cache —
+the full abstract interpretation never re-runs per state (paper §5.3).
 """
 
 from __future__ import annotations
@@ -22,6 +27,10 @@ import random
 
 from repro.core.actions import Action, STOP, valid_actions
 from repro.core.cost_model import CostModel, ShardingState
+from repro.core.evaluator import IncrementalEvaluator
+from repro.core.search import SearchBackend, SearchResult, recover_actions
+
+__all__ = ["MCTS", "MCTSBackend", "MCTSConfig", "SearchResult"]
 
 
 @dataclasses.dataclass
@@ -45,23 +54,18 @@ class _Node:
         self.untried = untried
 
 
-@dataclasses.dataclass
-class SearchResult:
-    best_state: ShardingState
-    best_cost: float
-    best_actions: list[Action]
-    rounds_run: int
-    evaluations: int
-    history: list[float]
-
-
 class MCTS:
-    def __init__(self, cost_model: CostModel, actions: list[Action],
-                 config: MCTSConfig = MCTSConfig()) -> None:
-        self.cm = cost_model
+    def __init__(self, cost_model: CostModel | IncrementalEvaluator,
+                 actions: list[Action],
+                 config: MCTSConfig | None = None) -> None:
+        if isinstance(cost_model, IncrementalEvaluator):
+            self.ev = cost_model
+        else:
+            self.ev = IncrementalEvaluator(cost_model)
+        self.cm = self.ev.cm
         self.actions = actions
-        self.cfg = config
-        self.rng = random.Random(config.seed)
+        self.cfg = config if config is not None else MCTSConfig()
+        self.rng = random.Random(self.cfg.seed)
         self.nodes: dict[ShardingState, _Node] = {}
         self.evaluations = 0
 
@@ -75,7 +79,12 @@ class MCTS:
 
     def _cost(self, state: ShardingState) -> float:
         self.evaluations += 1
-        return self.cm.paper_cost(state)
+        return self.ev.paper_cost(state)
+
+    def _cost_child(self, state: ShardingState,
+                    action: Action) -> tuple[ShardingState, float]:
+        self.evaluations += 1
+        return self.ev.paper_cost_child(state, action)
 
     def _reward(self, cost: float, depth: int) -> float:
         return 1.0 - cost - self.cfg.length_penalty * depth
@@ -103,9 +112,11 @@ class MCTS:
                     break
                 action = max(node.children,
                              key=lambda a: self._uct(node, node.children[a]))
-            if action is STOP or action.color < 0:
+            if action.is_stop:
                 break
-            nxt = action.apply(state)
+            # incremental child costing primes the transposition cache for
+            # the prefix-candidate sweep in search()
+            nxt, _ = self._cost_child(state, action)
             node.children[action] = nxt
             if nxt == state:
                 break
@@ -123,7 +134,7 @@ class MCTS:
                     av = valid_actions(self.actions, s)
                     if not av or self.rng.random() < 0.35:
                         break
-                    s = self.rng.choice(av).apply(s)
+                    s, _ = self._cost_child(s, self.rng.choice(av))
                     d += 1
                 return path, s, d
         return path, state, depth
@@ -162,18 +173,23 @@ class MCTS:
                     break           # paper: stop when a round fails to improve
             else:
                 stale = 0
-        actions = _recover_actions(best_state)
+        actions = recover_actions(best_state)
         return SearchResult(best_state, best_cost, actions, rounds_run,
                             self.evaluations, history)
 
 
-def _recover_actions(state: ShardingState) -> list[Action]:
-    ca, bits = state.as_dicts()
-    out = []
-    bit_items = tuple(sorted(bits.items()))
-    first = True
-    for color, axes in sorted(ca.items()):
-        for axis in axes:
-            out.append(Action(color, axis, bit_items if first else ()))
-            first = False
-    return out
+class MCTSBackend(SearchBackend):
+    """``SearchBackend`` adapter for :class:`MCTS`."""
+
+    name = "mcts"
+
+    def search(self, evaluator, actions: list[Action], config=None,
+               root: ShardingState = ShardingState()) -> SearchResult:
+        if config is not None and not isinstance(config, MCTSConfig):
+            raise TypeError(f"mcts backend expects MCTSConfig, "
+                            f"got {type(config).__name__}")
+        return MCTS(evaluator, actions, config).search(root)
+
+
+# backwards-compatible alias (pre-refactor location)
+_recover_actions = recover_actions

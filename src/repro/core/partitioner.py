@@ -1,5 +1,7 @@
 """TOAST front-end: trace a JAX function, run the NDA + conflict analysis,
-search with MCTS, and emit a ``ShardingPlan`` of ``PartitionSpec``s.
+search with a pluggable backend (MCTS by default; see
+``repro.core.search``) over the incremental cost evaluator, and emit a
+``ShardingPlan`` of ``PartitionSpec``s.
 
 Typical use::
 
@@ -28,9 +30,11 @@ from repro.core.actions import Action, build_action_space
 from repro.core.conflicts import ConflictAnalysis, analyze_conflicts
 from repro.core.cost_model import (CostBreakdown, CostModel, HardwareSpec,
                                    MeshSpec, ShardingState)
+from repro.core.evaluator import IncrementalEvaluator
 from repro.core.ir import Program, extract_program
-from repro.core.mcts import MCTS, MCTSConfig
+from repro.core.mcts import MCTSConfig
 from repro.core.nda import NDAResult, run_nda
+from repro.core.search import SearchBackend, get_backend
 
 
 @dataclasses.dataclass
@@ -50,6 +54,8 @@ class ShardingPlan:
     num_conflicts: int
     num_compat_sets: int
     num_resolution_bits: int
+    backend: str = "mcts"
+    eval_stats: dict = dataclasses.field(default_factory=dict)
 
     def jax_in_shardings(self, mesh: jax.sharding.Mesh, treedef=None):
         specs = [NamedSharding(mesh, s) for s in self.in_specs]
@@ -79,6 +85,8 @@ class ShardingPlan:
             "num_conflicts": self.num_conflicts,
             "num_compat_sets": self.num_compat_sets,
             "num_resolution_bits": self.num_resolution_bits,
+            "backend": self.backend,
+            "eval_stats": self.eval_stats,
         }, indent=2)
 
 
@@ -184,10 +192,16 @@ def auto_partition(fn: Callable, args: tuple, mesh: MeshSpec, *,
                    kwargs: dict | None = None,
                    hw: HardwareSpec = HardwareSpec(),
                    mcts: MCTSConfig | None = None,
+                   backend: str | SearchBackend = "mcts",
+                   search_config=None,
                    min_dims: int = 10,
                    logical_axes: list[tuple[str, ...]] | None = None,
                    artifacts: ToastArtifacts | None = None) -> ShardingPlan:
-    """Run the full TOAST pipeline on ``fn(*args, **kwargs)``."""
+    """Run the full TOAST pipeline on ``fn(*args, **kwargs)``.
+
+    ``backend`` selects the search strategy ("mcts", "beam", "greedy", or a
+    ``SearchBackend`` instance); ``search_config`` is the backend-specific
+    config (``mcts=`` remains the MCTS-specific alias)."""
     t0 = time.perf_counter()
     art = artifacts or analyze(fn, args, kwargs)
     cm = CostModel(art.prog, art.nda, art.analysis, mesh, hw)
@@ -197,8 +211,12 @@ def auto_partition(fn: Callable, args: tuple, mesh: MeshSpec, *,
         actions = build_action_space(art.nda, art.analysis, mesh,
                                      min_dims=min_dims)
         art.actions_by_mesh[key] = actions
-    agent = MCTS(cm, actions, mcts or MCTSConfig())
-    result = agent.search()
+    engine = get_backend(backend)
+    cfg = search_config
+    if cfg is None and engine.name == "mcts":
+        cfg = mcts
+    evaluator = IncrementalEvaluator(cm)
+    result = engine.search(evaluator, actions, cfg)
     elapsed = time.perf_counter() - t0
 
     specs = _state_specs(cm, result.best_state, art.prog)
@@ -209,7 +227,7 @@ def auto_partition(fn: Callable, args: tuple, mesh: MeshSpec, *,
         input_paths=art.prog.input_paths,
         state=result.best_state,
         cost=result.best_cost,
-        breakdown=cm.evaluate(result.best_state).as_dict(),
+        breakdown=evaluator.evaluate(result.best_state).as_dict(),
         baseline_breakdown=cm.baseline().as_dict(),
         constraint_specs=_constraint_specs(cm, result.best_state,
                                            art.analysis),
@@ -221,4 +239,6 @@ def auto_partition(fn: Callable, args: tuple, mesh: MeshSpec, *,
         num_conflicts=len(art.analysis.conflicts),
         num_compat_sets=len(art.analysis.compat_sets),
         num_resolution_bits=art.analysis.num_resolution_bits,
+        backend=engine.name,
+        eval_stats=evaluator.stats.as_dict(),
     )

@@ -1,0 +1,160 @@
+"""Pluggable search core.
+
+Search strategies are backends behind one interface::
+
+    backend.search(evaluator, actions, config) -> SearchResult
+
+where ``evaluator`` is an ``IncrementalEvaluator`` (transposition cache +
+single-action child costing) and ``actions`` the pruned action space of
+``repro.core.actions``.  Backends never touch the cost model directly —
+everything goes through ``evaluator.paper_cost`` / ``paper_cost_child`` so
+every strategy benefits from incremental evaluation for free.
+
+Built-in backends:
+
+- ``"mcts"``   — the paper's Monte-Carlo Tree Search (§4.1–4.3), in
+  ``repro.core.mcts`` (imported lazily to avoid a module cycle).
+- ``"beam"``   — deterministic beam search over the action DAG; a strong,
+  cheap baseline and a regression anchor for MCTS.
+- ``"greedy"`` — beam with width 1 (steepest-descent hill climb).
+
+Select with ``auto_partition(..., backend="beam")`` or register custom
+backends via ``register_backend``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from repro.core.actions import Action, valid_actions
+from repro.core.cost_model import ShardingState
+
+
+@dataclasses.dataclass
+class SearchResult:
+    best_state: ShardingState
+    best_cost: float
+    best_actions: list[Action]
+    rounds_run: int
+    # cost queries the backend issued, transposition-cache hits included
+    # (uniform across backends; actual cost-model work — incremental vs
+    # from-base evaluations — is in the evaluator's EvalStats).
+    evaluations: int
+    history: list[float]
+
+
+class SearchBackend:
+    """Interface every search strategy implements."""
+
+    name = "backend"
+
+    def search(self, evaluator, actions: list[Action], config=None,
+               root: ShardingState = ShardingState()) -> SearchResult:
+        raise NotImplementedError
+
+
+def recover_actions(state: ShardingState) -> list[Action]:
+    """Reconstruct one action sequence reaching a canonical state."""
+    ca, bits = state.as_dicts()
+    out = []
+    bit_items = tuple(sorted(bits.items()))
+    first = True
+    for color, axes in sorted(ca.items()):
+        for axis in axes:
+            out.append(Action(color, axis, bit_items if first else ()))
+            first = False
+    return out
+
+
+@dataclasses.dataclass
+class BeamConfig:
+    width: int = 8
+    max_depth: int = 30
+    patience: int = 2          # depth levels without improvement -> stop
+
+
+class BeamSearchBackend(SearchBackend):
+    """Deterministic beam search: expand every frontier state by every valid
+    action, keep the ``width`` cheapest distinct states, stop after
+    ``patience`` levels without improving the best-known cost."""
+
+    def __init__(self, width: int | None = None, name: str = "beam") -> None:
+        self._width = width
+        self.name = name
+
+    def search(self, evaluator, actions: list[Action], config=None,
+               root: ShardingState = ShardingState()) -> SearchResult:
+        if config is not None and not isinstance(config, BeamConfig):
+            raise TypeError(f"{self.name} backend expects BeamConfig, "
+                            f"got {type(config).__name__}")
+        cfg = config if config is not None else BeamConfig()
+        if self._width is not None:
+            cfg = dataclasses.replace(cfg, width=self._width)
+        best_cost = evaluator.paper_cost(root)
+        best_state = root
+        evals = 1
+        history = [best_cost]
+        beam: list[tuple[float, ShardingState]] = [(best_cost, root)]
+        stale = 0
+        depth_run = 0
+        for _ in range(cfg.max_depth):
+            depth_run += 1
+            candidates: dict[ShardingState, float] = {}
+            for _, s in beam:
+                for a in valid_actions(actions, s):
+                    child, cost = evaluator.paper_cost_child(s, a)
+                    evals += 1
+                    prev = candidates.get(child)
+                    if prev is None or cost < prev:
+                        candidates[child] = cost
+            if not candidates:
+                break
+            ranked = sorted(candidates.items(), key=lambda kv: kv[1])
+            ranked = ranked[:cfg.width]
+            beam = [(c, s) for s, c in ranked]
+            improved = False
+            for s, c in ranked:
+                if c < best_cost - 1e-12:
+                    best_cost, best_state, improved = c, s, True
+            history.append(best_cost)
+            if improved:
+                stale = 0
+            else:
+                stale += 1
+                if stale >= cfg.patience:
+                    break
+        return SearchResult(best_state, best_cost,
+                            recover_actions(best_state), depth_run, evals,
+                            history)
+
+
+_REGISTRY: dict[str, Callable[[], SearchBackend]] = {}
+
+
+def register_backend(name: str,
+                     factory: Callable[[], SearchBackend]) -> None:
+    _REGISTRY[name.lower()] = factory
+
+
+def _make_mcts() -> SearchBackend:
+    from repro.core.mcts import MCTSBackend    # lazy: avoids module cycle
+    return MCTSBackend()
+
+
+register_backend("mcts", _make_mcts)
+register_backend("beam", BeamSearchBackend)
+register_backend("greedy", lambda: BeamSearchBackend(width=1, name="greedy"))
+
+
+def get_backend(backend) -> SearchBackend:
+    """Resolve a backend instance from a name, factory, or instance."""
+    if isinstance(backend, SearchBackend):
+        return backend
+    if callable(backend):
+        return backend()
+    factory = _REGISTRY.get(str(backend).lower())
+    if factory is None:
+        raise ValueError(f"unknown search backend {backend!r}; "
+                         f"registered: {sorted(_REGISTRY)}")
+    return factory()

@@ -32,7 +32,8 @@ import numpy as np
 
 from repro.configs import ARCH_IDS, SHAPES, cells, get_config
 from repro.core.cost_model import HardwareSpec
-from repro.launch.mesh import make_production_mesh, production_mesh_spec
+from repro.launch.mesh import (compat_cost_analysis, make_production_mesh,
+                               mesh_context, production_mesh_spec)
 from repro.launch.specs import specs_from_rules, step_and_inputs
 from repro.models.sharding import (MANUAL_RULES, MANUAL_RULES_MULTIPOD,
                                    logical_rules)
@@ -41,6 +42,7 @@ HW = HardwareSpec()
 
 def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
              plan: str = "manual", toast_plan=None,
+             backend: str = "mcts",
              overrides: dict | None = None,
              extra_rules: dict | None = None) -> dict:
     """Lower + compile one cell; returns the recorded analysis.
@@ -66,6 +68,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
         mesh_spec = production_mesh_spec(multi_pod=multi_pod)
         plan_obj = toast_plan or auto_partition(
             fn, args, mesh_spec, logical_axes=flatten_logical_axes(names),
+            backend=backend,
             mcts=MCTSConfig(rounds=10, trajectories_per_round=48))
         rules = dict(plan_obj.logical_rules)
         flat_specs = [jax.sharding.NamedSharding(mesh, s)
@@ -75,6 +78,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
         plan_meta = {"toast_cost": plan_obj.cost,
                      "toast_search_s": round(plan_obj.search_seconds, 2),
                      "toast_evals": plan_obj.evaluations,
+                     "toast_backend": plan_obj.backend,
+                     "toast_eval_stats": plan_obj.eval_stats,
                      "toast_rules": {k: list(v) for k, v in rules.items()},
                      "toast_resolution_bits": plan_obj.num_resolution_bits}
     else:
@@ -90,7 +95,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
             is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
 
     t0 = time.perf_counter()
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         with logical_rules(rules):
             lowered = jax.jit(fn, in_shardings=in_shardings).lower(*args)
             t_lower = time.perf_counter() - t0
@@ -98,7 +103,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
     t_compile = time.perf_counter() - t0 - t_lower
 
     mem = compiled.memory_analysis()
-    ca = compiled.cost_analysis() or {}
+    ca = compat_cost_analysis(compiled)
     hlo = compiled.as_text()
     if os.environ.get("REPRO_KEEP_HLO"):
         import gzip
@@ -173,6 +178,9 @@ def main() -> None:
     ap.add_argument("--mesh", choices=["single", "multi", "both"],
                     default="both")
     ap.add_argument("--plan", default="manual")
+    ap.add_argument("--backend", default="mcts",
+                    help="search backend for --plan toast "
+                         "(mcts | beam | greedy)")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default="results/dryrun")
     ap.add_argument("--force", action="store_true")
@@ -222,7 +230,8 @@ def main() -> None:
             print(f"[run ] {tag} ...", flush=True)
             try:
                 rec = run_cell(arch, shape_name, multi_pod=multi,
-                               plan=args.plan, overrides=overrides or None,
+                               plan=args.plan, backend=args.backend,
+                               overrides=overrides or None,
                                extra_rules=extra_rules or None)
                 path.write_text(json.dumps(rec, indent=2))
                 print(f"[ ok ] {tag}: peak/dev="

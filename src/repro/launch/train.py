@@ -40,6 +40,7 @@ from repro.optim import compression as gc_mod
 
 
 def build_mesh(spec: MeshSpec):
+    from repro.launch.mesh import compat_make_mesh
     n = len(jax.devices())
     sizes = []
     remaining = n
@@ -47,17 +48,16 @@ def build_mesh(spec: MeshSpec):
         s = min(s, remaining)
         sizes.append(s)
         remaining //= s
-    return jax.make_mesh(
-        tuple(sizes), spec.axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(spec.axes))
+    return compat_make_mesh(tuple(sizes), spec.axes)
 
 
-def toast_rules(cfg, shape, mesh_spec: MeshSpec, budget_rounds=6):
+def toast_rules(cfg, shape, mesh_spec: MeshSpec, budget_rounds=6,
+                backend: str = "mcts"):
     from repro.core.partitioner import flatten_logical_axes
     fn, args, names = step_and_inputs(cfg, shape)
     flat_names = flatten_logical_axes(names)
     plan = auto_partition(fn, args, mesh_spec, min_dims=4,
-                          logical_axes=flat_names,
+                          logical_axes=flat_names, backend=backend,
                           mcts=MCTSConfig(rounds=budget_rounds))
     return plan
 
@@ -103,7 +103,8 @@ def run_once(args, attempt: int) -> bool:
     jit_step = jax.jit(train_step, donate_argnums=0)
     t0 = time.perf_counter()
     try:
-        with jax.set_mesh(mesh), logical_rules(rules):
+        from repro.launch.mesh import mesh_context
+        with mesh_context(mesh), logical_rules(rules):
             for i in range(start_step, args.steps):
                 _, batch = next(pipe)
                 if args.fail_at is not None and i == args.fail_at and \

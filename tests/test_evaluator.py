@@ -1,0 +1,223 @@
+"""Incremental cost-evaluation engine + pluggable search-backend tests.
+
+The load-bearing property: for ANY reachable sharding state, the
+incremental evaluator (parent-diff chains, transposition cache, from-base
+fallback) must match the exhaustive abstract interpreter
+(``CostModel.evaluate_dense``) to 1e-9 relative — on every breakdown field,
+not just the scalar cost.  Exercised over seeded random action sequences on
+two programs: a plain MLP (no conflicts) and a long-sequence attention
+block (conflicts + resolution bits + memory pressure).
+"""
+
+import math
+import random
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.actions import build_action_space, valid_actions
+from repro.core.cost_model import (CostModel, HardwareSpec, MeshSpec,
+                                   ShardingState)
+from repro.core.evaluator import IncrementalEvaluator
+from repro.core.mcts import MCTS, MCTSBackend, MCTSConfig
+from repro.core.partitioner import analyze, auto_partition
+from repro.core.search import (BeamConfig, BeamSearchBackend, SearchResult,
+                               get_backend, recover_actions)
+
+_FIELDS = ("compute_time", "memory_time", "collective_time", "peak_bytes",
+           "flops", "comm_bytes")
+
+
+def sh(*s):
+    return jax.ShapeDtypeStruct(s, jnp.float32)
+
+
+def mlp(x, w1, w2):
+    return jax.nn.relu(x @ w1) @ w2
+
+
+def attn(x, wq, wk, wv):
+    q = x @ wq
+    k = x @ wk
+    v = x @ wv
+    a = q @ k.T / 8.0
+    p = jax.nn.softmax(a, axis=-1)
+    return p @ v
+
+
+MLP_ARGS = (sh(1024, 512), sh(512, 2048), sh(2048, 512))
+ATTN_ARGS = (sh(16384, 256), sh(256, 256), sh(256, 256), sh(256, 256))
+
+
+@pytest.fixture(scope="module")
+def mlp_setup():
+    art = analyze(mlp, MLP_ARGS)
+    mesh = MeshSpec(("data", "model"), (4, 4))
+    cm = CostModel(art.prog, art.nda, art.analysis, mesh)
+    actions = build_action_space(art.nda, art.analysis, mesh, min_dims=1)
+    return cm, actions
+
+
+@pytest.fixture(scope="module")
+def attn_setup():
+    art = analyze(attn, ATTN_ARGS)
+    mesh = MeshSpec(("s", "m"), (8, 4))
+    cm = CostModel(art.prog, art.nda, art.analysis, mesh,
+                   HardwareSpec(hbm_per_chip=5e8))
+    actions = build_action_space(art.nda, art.analysis, mesh, min_dims=1)
+    assert art.analysis.num_resolution_bits >= 1   # bits must be exercised
+    return cm, actions
+
+
+def _assert_matches_dense(cm, state, bd):
+    dense = cm.evaluate_dense(state)
+    for f in _FIELDS:
+        got, want = getattr(bd, f), getattr(dense, f)
+        assert math.isclose(got, want, rel_tol=1e-9, abs_tol=1e-12), \
+            f"{f}: incremental={got!r} dense={want!r} state={state}"
+
+
+class TestIncrementalExactness:
+    """Satellite: incremental == full re-evaluation across random walks."""
+
+    @pytest.mark.parametrize("setup,seed", [("mlp_setup", 0),
+                                            ("attn_setup", 1)])
+    def test_random_walks_match_dense(self, setup, seed, request):
+        cm, actions = request.getfixturevalue(setup)
+        ev = IncrementalEvaluator(cm)
+        rng = random.Random(seed)
+        for _ in range(25):
+            s = ShardingState()
+            for _ in range(rng.randint(1, 8)):
+                av = valid_actions(actions, s)
+                if not av:
+                    break
+                s, bd = ev.child(s, rng.choice(av))
+                _assert_matches_dense(cm, s, bd)
+                dense_cost = cm.cost_from_breakdown(cm.evaluate_dense(s))
+                assert math.isclose(ev.paper_cost(s), dense_cost,
+                                    rel_tol=1e-9)
+
+    def test_from_base_fallback_matches_dense(self, attn_setup):
+        """evaluate() on a state with no parent record (fresh evaluator)."""
+        cm, actions = attn_setup
+        rng = random.Random(7)
+        s = ShardingState()
+        for _ in range(6):
+            av = valid_actions(actions, s)
+            if not av:
+                break
+            s = rng.choice(av).apply(s)
+        ev = IncrementalEvaluator(cm)
+        _assert_matches_dense(cm, s, ev.evaluate(s))
+        assert ev.stats.base_evals == 1
+
+    def test_transposition_cache_hits(self, mlp_setup):
+        cm, actions = mlp_setup
+        ev = IncrementalEvaluator(cm)
+        s0 = ShardingState()
+        a = actions[0]
+        s1, bd1 = ev.child(s0, a)
+        s1b, bd1b = ev.child(s0, a)
+        assert s1 == s1b and bd1 is bd1b
+        assert ev.stats.cache_hits >= 1
+
+    def test_record_eviction_keeps_exactness(self, mlp_setup):
+        """With a tiny record LRU, chains must fall back to from-base
+        evaluation and stay exact."""
+        cm, actions = mlp_setup
+        ev = IncrementalEvaluator(cm, max_records=1)
+        rng = random.Random(3)
+        s = ShardingState()
+        for _ in range(5):
+            av = valid_actions(actions, s)
+            if not av:
+                break
+            s, bd = ev.child(s, rng.choice(av))
+            _assert_matches_dense(cm, s, bd)
+
+    def test_diff_from_base_evaluate_matches_dense(self, attn_setup):
+        cm, actions = attn_setup
+        rng = random.Random(11)
+        for _ in range(10):
+            s = ShardingState()
+            for _ in range(rng.randint(0, 6)):
+                av = valid_actions(actions, s)
+                if not av:
+                    break
+                s = rng.choice(av).apply(s)
+            _assert_matches_dense(cm, s, cm.evaluate(s))
+
+
+class TestSearchBackends:
+    def test_registry_resolution(self):
+        assert get_backend("mcts").name == "mcts"
+        assert get_backend("beam").name == "beam"
+        assert get_backend("greedy").name == "greedy"
+        backend = BeamSearchBackend(width=3)
+        assert get_backend(backend) is backend
+        with pytest.raises(ValueError):
+            get_backend("simulated-annealing")
+
+    @pytest.mark.parametrize("name", ["greedy", "beam", "mcts"])
+    def test_backends_improve_over_root(self, name, mlp_setup):
+        cm, actions = mlp_setup
+        ev = IncrementalEvaluator(cm)
+        cfg = MCTSConfig(rounds=4, trajectories_per_round=12) \
+            if name == "mcts" else BeamConfig(max_depth=8)
+        res = get_backend(name).search(ev, actions, cfg)
+        assert isinstance(res, SearchResult)
+        assert res.best_cost < 1.0
+        assert res.evaluations > 0
+        # recovered actions reproduce the best state
+        s = ShardingState()
+        for a in res.best_actions:
+            s = a.apply(s)
+        assert s == res.best_state
+
+    def test_beam_cost_matches_dense(self, attn_setup):
+        """The state a backend returns must be costed exactly."""
+        cm, actions = attn_setup
+        ev = IncrementalEvaluator(cm)
+        res = get_backend("beam").search(ev, actions, BeamConfig(max_depth=8))
+        dense = cm.cost_from_breakdown(cm.evaluate_dense(res.best_state))
+        assert math.isclose(res.best_cost, dense, rel_tol=1e-9)
+
+    def test_mcts_accepts_evaluator_and_cost_model(self, mlp_setup):
+        cm, actions = mlp_setup
+        cfg = MCTSConfig(rounds=2, trajectories_per_round=8, seed=5)
+        r1 = MCTS(cm, actions, cfg).search()
+        r2 = MCTS(IncrementalEvaluator(cm), actions, cfg).search()
+        assert r1.best_state == r2.best_state
+        assert math.isclose(r1.best_cost, r2.best_cost, rel_tol=1e-12)
+
+    def test_auto_partition_backend_selection(self):
+        art = analyze(mlp, MLP_ARGS)
+        mesh = MeshSpec(("data", "model"), (4, 4))
+        plan = auto_partition(mlp, MLP_ARGS, mesh, min_dims=1,
+                              artifacts=art, backend="greedy")
+        assert plan.backend == "greedy"
+        assert plan.cost < 1.0
+        assert plan.eval_stats["queries"] > 0
+        import json
+        assert json.loads(plan.to_json())["backend"] == "greedy"
+
+
+class TestConfigDefaults:
+    def test_mcts_config_not_shared(self, mlp_setup):
+        """Satellite: the old ``config: MCTSConfig = MCTSConfig()`` default
+        shared one mutable instance across every search."""
+        cm, actions = mlp_setup
+        a1 = MCTS(cm, actions)
+        a2 = MCTS(cm, actions)
+        assert a1.cfg is not a2.cfg
+        a1.cfg.rounds = 99
+        assert a2.cfg.rounds != 99
+
+    def test_mcts_backend_default_config(self, mlp_setup):
+        cm, actions = mlp_setup
+        res = MCTSBackend().search(
+            IncrementalEvaluator(cm), actions,
+            MCTSConfig(rounds=2, trajectories_per_round=4))
+        assert isinstance(res, SearchResult)

@@ -7,6 +7,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # optional test extra; see pyproject.toml
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ops, ref

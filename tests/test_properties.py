@@ -15,6 +15,8 @@ whole system rests on must hold:
 import jax
 import jax.numpy as jnp
 import pytest
+
+pytest.importorskip("hypothesis")  # optional test extra; see pyproject.toml
 from hypothesis import given, settings, strategies as st
 
 from repro.core.conflicts import analyze_conflicts

@@ -7,6 +7,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # optional test extra; see pyproject.toml
 from hypothesis import given, settings, strategies as st
 
 from repro.ckpt.checkpoint import CheckpointManager, latest_step, save
@@ -94,8 +96,8 @@ class TestCheckpoint:
     def test_elastic_restore_onto_sharding(self, tmp_path):
         """Restore re-places leaves with explicit shardings (any mesh)."""
         save(tmp_path, 1, self._tree(2))
-        mesh = jax.make_mesh((1,), ("x",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import compat_make_mesh
+        mesh = compat_make_mesh((1,), ("x",))
         sh = jax.sharding.NamedSharding(mesh,
                                         jax.sharding.PartitionSpec())
         shardings = jax.tree_util.tree_map(lambda _: sh, self._tree())
