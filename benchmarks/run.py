@@ -13,6 +13,9 @@ Sections:
 - nda:    static-analysis latency per model (scalability claim §5.3).
 - search: cost-evaluation throughput, dense seed path vs the incremental
           engine (writes BENCH_search.json) — scalability claim §5.3.
+- zoo:    zoo-wide portfolio auto-partitioning sweep over every config in
+          repro/configs (writes BENCH_zoo.json) — the paper's "diverse
+          model architectures" claim.
 - kernels: Pallas kernel microbenchmarks (interpret mode) vs jnp oracle.
 """
 
@@ -81,6 +84,28 @@ def nda_latency():
              f"bits={art.analysis.num_resolution_bits}")
 
 
+def zoo_sweep(out="BENCH_zoo.json", mesh="4x2", plan_store=None):
+    import json
+    import pathlib
+
+    from repro.launch import zoo
+    store = None
+    if plan_store:
+        from repro.ckpt.plan_store import PlanStore
+        store = PlanStore(plan_store)
+    record = zoo.run_zoo(zoo.parse_mesh(mesh), plan_store=store,
+                         verbose=False)
+    for r in record["results"]:
+        if r["status"] != "ok":
+            _row(f"zoo.{r['model']}.ERROR", 0.0, r["error"][:80])
+            continue
+        _row(f"zoo.{r['model']}", r["search_s"] * 1e6,
+             f"cost={r['cost']:.4f};feasible={int(r['feasible'])};"
+             f"speedup={r['speedup']};evals={r['evaluations']};"
+             f"winner={r['winner']};cached={int(r['cached'])}")
+    pathlib.Path(out).write_text(json.dumps(record, indent=2))
+
+
 def kernel_micro():
     from repro.kernels import ops, ref
     key = jax.random.PRNGKey(0)
@@ -111,9 +136,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--section", default="all",
                     choices=["all", "fig8", "fig10", "nda", "search",
-                             "kernels"])
+                             "zoo", "kernels"])
     ap.add_argument("--models", default=",".join(MODELS))
     ap.add_argument("--search-out", default="BENCH_search.json")
+    ap.add_argument("--zoo-out", default="BENCH_zoo.json")
+    ap.add_argument("--zoo-mesh", default="4x2")
+    ap.add_argument("--zoo-plan-store", default="",
+                    help="optional plan-store dir for the zoo section")
     args = ap.parse_args()
     models = tuple(args.models.split(","))
     print("name,us_per_call,derived")
@@ -126,6 +155,9 @@ def main() -> None:
     if args.section in ("all", "search"):
         from benchmarks import search_throughput
         search_throughput.run(out=args.search_out)
+    if args.section in ("all", "zoo"):
+        zoo_sweep(out=args.zoo_out, mesh=args.zoo_mesh,
+                  plan_store=args.zoo_plan_store or None)
     if args.section in ("all", "kernels"):
         kernel_micro()
 

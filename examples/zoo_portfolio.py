@@ -1,0 +1,41 @@
+"""Zoo portfolio driver in miniature: sweep a few architectures, then hit
+the plan cache.
+
+    PYTHONPATH=src python examples/zoo_portfolio.py
+
+Partitions three different model families (dense GQA, MoE, hybrid
+attention/RG-LRU) on a 4x2 mesh with the portfolio search backend, prints
+the per-model feasibility/cost/time table, then re-runs the sweep to show
+every plan coming back from the persistent plan store without a search.
+
+The full-zoo equivalent is ``python -m repro.launch.zoo --mesh 4x2``.
+"""
+import tempfile
+
+from repro.ckpt.plan_store import PlanStore
+from repro.launch.zoo import format_table, parse_mesh, run_zoo
+
+ARCHS = ("qwen2_05b", "mixtral_8x22b", "recurrentgemma_2b")
+mesh = parse_mesh("4x2")
+
+with tempfile.TemporaryDirectory() as d:
+    store = PlanStore(d)
+
+    print("=== cold sweep (portfolio search per model) ===")
+    record = run_zoo(mesh, archs=ARCHS, plan_store=store, verbose=False)
+    print(format_table(record["results"]))
+    print(f"total: {record['total_seconds']}s  "
+          f"cache: {store.stats.hits} hits / {store.stats.misses} misses")
+
+    print("\n=== warm sweep (same programs, same mesh) ===")
+    record2 = run_zoo(mesh, archs=ARCHS, plan_store=store, verbose=False)
+    print(format_table(record2["results"]))
+    print(f"total: {record2['total_seconds']}s  "
+          f"cache: {store.stats.hits} hits / {store.stats.misses} misses")
+    assert all(r["cached"] for r in record2["results"])
+
+    print("\nper-model winning sharding rules:")
+    for row in record["results"]:
+        rules = ", ".join(f"{k}->{'/'.join(v)}"
+                          for k, v in sorted(row["rules"].items()))
+        print(f"  {row['model']:>18}: {rules or '(none)'}")

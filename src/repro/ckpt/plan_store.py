@@ -1,0 +1,207 @@
+"""Persistent ``ShardingPlan`` cache keyed by (program, mesh, hardware).
+
+Searching a sharding plan costs seconds to minutes; the plan itself is a
+few KiB of JSON.  ``PlanStore`` therefore memoizes ``auto_partition``
+results on disk so that repeated partitioning of an unchanged program on
+an unchanged mesh is a file read, not a re-search — the portfolio-style
+reuse that makes zoo-wide driving practical (see
+``python -m repro.launch.zoo``).
+
+Keying:
+
+- the **program fingerprint** — a deterministic SHA-256 over the
+  extracted tensor program (``repro.core.ir.program_fingerprint``); no
+  ``id()``-based components, so keys are stable across processes;
+- the **mesh** (axis names, sizes, DCN axes);
+- the **hardware spec** (all roofline constants, including the memory
+  budget — a plan feasible on 16 GiB chips may be infeasible on 8 GiB);
+- the **request parameters** that change the search outcome
+  (``min_dims`` action-space pruning, declared ``logical_axes``) — the
+  search *backend* is deliberately not part of the key, so any backend
+  can reuse any backend's plan.
+
+Layout: one ``<key>.json`` file per entry under the store directory,
+containing the metadata triple plus the full plan
+(``ShardingPlan.as_dict``).  Writes are atomic (tmp file + rename), so a
+crashed writer never leaves a truncated entry behind.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import pathlib
+import tempfile
+
+from repro.core.cost_model import HardwareSpec, MeshSpec
+from repro.core.partitioner import ShardingPlan
+
+
+def plan_key(fingerprint: str, mesh: MeshSpec,
+             hw: HardwareSpec | None = None,
+             params: dict | None = None) -> str:
+    """Deterministic cache key for one partitioning request.
+
+    The key covers everything that changes the *search outcome*: the
+    program, the mesh, the hardware constants, and the request
+    parameters (``min_dims`` action-space pruning, declared
+    ``logical_axes``).  The search *backend* is deliberately excluded —
+    reusing a plan found by a different backend is the point of the
+    cache (Automap-style result reuse).
+
+    Args:
+        fingerprint: program fingerprint from
+            ``repro.core.ir.program_fingerprint``.
+        mesh: the mesh the plan targets.
+        hw: hardware spec (defaults used when ``None``).
+        params: request parameters affecting the plan (sorted into the
+            key via ``repr``; values must have deterministic reprs).
+
+    Returns:
+        A 64-char hex SHA-256 key.
+    """
+    hw = hw or HardwareSpec()
+    parts = [
+        f"prog:{fingerprint}",
+        f"mesh:{mesh.as_dict()}",
+        "hw:" + ":".join(f"{f.name}={getattr(hw, f.name)!r}"
+                         for f in dataclasses.fields(hw)),
+        "params:" + ":".join(f"{k}={params[k]!r}"
+                             for k in sorted(params or {})),
+    ]
+    return hashlib.sha256("\x00".join(parts).encode()).hexdigest()
+
+
+@dataclasses.dataclass
+class StoreStats:
+    """Hit/miss/write counters for one ``PlanStore`` instance."""
+
+    hits: int = 0
+    misses: int = 0
+    puts: int = 0
+
+    def as_dict(self) -> dict:
+        """Plain-dict view (JSON-serializable)."""
+        return dataclasses.asdict(self)
+
+
+class PlanStore:
+    """Directory-backed cache of ``ShardingPlan``s.
+
+    Use it through ``auto_partition``, which consults :meth:`get` before
+    searching, :meth:`put`s fresh plans, and keys entries with its own
+    request params (``min_dims``, ``logical_axes``)::
+
+        store = PlanStore("results/plan_store")
+        plan  = auto_partition(fn, args, mesh, plan_store=store)  # search
+        plan2 = auto_partition(fn, args, mesh, plan_store=store)  # hit
+
+    Direct :meth:`get`/:meth:`put` calls work too, but reader and writer
+    must agree on the ``params`` dict (and a plan stored via :meth:`put`
+    must carry a fingerprint — plain ``auto_partition`` calls without
+    ``plan_store=`` leave ``plan.fingerprint`` empty and such plans are
+    skipped).
+    """
+
+    def __init__(self, directory: str | os.PathLike) -> None:
+        """Open (or lazily create) a store rooted at ``directory``.
+
+        Args:
+            directory: store root; created on first write.
+        """
+        self.directory = pathlib.Path(directory)
+        self.stats = StoreStats()
+
+    def _path(self, key: str) -> pathlib.Path:
+        return self.directory / f"{key}.json"
+
+    def get(self, fingerprint: str, mesh: MeshSpec,
+            hw: HardwareSpec | None = None,
+            params: dict | None = None) -> ShardingPlan | None:
+        """Look up a cached plan.
+
+        Args:
+            fingerprint: program fingerprint.
+            mesh: target mesh.
+            hw: hardware spec the plan must have been searched under.
+            params: request parameters (see :func:`plan_key`); must match
+                the ``put`` that stored the plan.
+
+        Returns:
+            The cached :class:`ShardingPlan` with ``cached=True`` and
+            ``search_seconds=0``, or ``None`` on a miss (including
+            unreadable/corrupt entries, which count as misses).
+        """
+        path = self._path(plan_key(fingerprint, mesh, hw, params))
+        try:
+            entry = json.loads(path.read_text())
+            plan = ShardingPlan.from_dict(entry["plan"])
+        except Exception:       # noqa: BLE001 — any malformed entry is a miss
+            self.stats.misses += 1
+            return None
+        plan.cached = True
+        plan.search_seconds = 0.0
+        self.stats.hits += 1
+        return plan
+
+    def put(self, plan: ShardingPlan,
+            hw: HardwareSpec | None = None,
+            params: dict | None = None) -> pathlib.Path | None:
+        """Persist ``plan`` under its fingerprint/mesh/hardware key.
+
+        Args:
+            plan: the plan to store; must carry a non-empty
+                ``plan.fingerprint`` (plans from ``auto_partition(...,
+                plan_store=...)`` always do).  Plans without a
+                fingerprint are skipped.
+            hw: hardware spec the plan was searched under.
+            params: request parameters (see :func:`plan_key`).
+
+        Returns:
+            The path written, or ``None`` when the plan was skipped.
+        """
+        if not plan.fingerprint:
+            return None
+        self.directory.mkdir(parents=True, exist_ok=True)
+        path = self._path(plan_key(plan.fingerprint, plan.mesh, hw, params))
+        entry = {
+            "fingerprint": plan.fingerprint,
+            "params": {k: repr(v) for k, v in (params or {}).items()},
+            "mesh": plan.mesh.as_dict(),
+            "hardware": dataclasses.asdict(hw or HardwareSpec()),
+            "plan": plan.as_dict(),
+        }
+        fd, tmp = tempfile.mkstemp(dir=self.directory, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(entry, f, indent=2)
+            os.replace(tmp, path)              # atomic commit
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+        self.stats.puts += 1
+        return path
+
+    def __len__(self) -> int:
+        """Number of committed entries in the store directory."""
+        if not self.directory.exists():
+            return 0
+        return sum(1 for p in self.directory.glob("*.json"))
+
+    def clear(self) -> int:
+        """Delete every entry.
+
+        Returns:
+            How many entries were removed.
+        """
+        n = 0
+        if self.directory.exists():
+            for p in self.directory.glob("*.json"):
+                p.unlink()
+                n += 1
+        return n

@@ -66,6 +66,11 @@ class MeshSpec:
     def num_devices(self) -> int:
         return int(np.prod(self.sizes))
 
+    def as_dict(self) -> dict:
+        """JSON-serializable dict (the plan/store/zoo wire format)."""
+        return {"axes": list(self.axes), "sizes": list(self.sizes),
+                "dcn_axes": list(self.dcn_axes)}
+
 
 @dataclasses.dataclass(frozen=True)
 class ShardingState:

@@ -43,6 +43,7 @@ class EvalStats:
     rows_recosted: int = 0       # op cost rows recomputed, all evals
 
     def as_dict(self) -> dict:
+        """Plain-dict view (JSON-serializable)."""
         return dataclasses.asdict(self)
 
 
@@ -77,10 +78,24 @@ class IncrementalEvaluator:
     # -- public API ----------------------------------------------------------
 
     def baseline(self) -> CostBreakdown:
+        """Breakdown of the unsharded program (memoized in the model).
+
+        Returns:
+            The base :class:`CostBreakdown` every cost is relative to.
+        """
         return self.cm.baseline()
 
     def evaluate(self, state: ShardingState) -> CostBreakdown:
-        """Breakdown for a state; cached, from-base if no record exists."""
+        """Cost breakdown of an arbitrary state.
+
+        Args:
+            state: canonical sharding state to cost.
+
+        Returns:
+            The exact :class:`CostBreakdown` — from the transposition
+            cache when seen before, else evaluated as a diff from the
+            unsharded base.
+        """
         self.stats.queries += 1
         bd = self._bd.get(state)
         if bd is not None:
@@ -91,7 +106,18 @@ class IncrementalEvaluator:
     def child(self, parent: ShardingState, action: Action
               ) -> tuple[ShardingState, CostBreakdown]:
         """Apply ``action`` to ``parent`` and cost the child incrementally.
-        This is the hot path of every search backend."""
+
+        This is the hot path of every search backend: only the action's
+        dirty op/value sets are re-costed on top of the parent's record.
+
+        Args:
+            parent: the state the search is expanding.
+            action: the single action to apply.
+
+        Returns:
+            ``(child_state, breakdown)`` — the canonical child state and
+            its exact cost breakdown.
+        """
         state = action.apply(parent)
         self.stats.queries += 1
         bd = self._bd.get(state)
@@ -108,10 +134,27 @@ class IncrementalEvaluator:
                                                state).breakdown
 
     def paper_cost(self, state: ShardingState) -> float:
+        """Scalar paper cost ``C(s) = RT(s) + MP(s)`` of a state.
+
+        Args:
+            state: canonical sharding state to cost.
+
+        Returns:
+            Relative runtime plus memory penalty (1.0 == unsharded).
+        """
         return self.cm.cost_from_breakdown(self.evaluate(state))
 
     def paper_cost_child(self, parent: ShardingState, action: Action
                          ) -> tuple[ShardingState, float]:
+        """:meth:`child` reduced to the scalar paper cost.
+
+        Args:
+            parent: the state the search is expanding.
+            action: the single action to apply.
+
+        Returns:
+            ``(child_state, paper_cost)``.
+        """
         state, bd = self.child(parent, action)
         return state, self.cm.cost_from_breakdown(bd)
 

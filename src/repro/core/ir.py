@@ -11,6 +11,8 @@ identities).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import re
 from typing import Any
 
 import jax
@@ -223,6 +225,85 @@ class _Extractor:
             outs = self.extract(br.jaxpr, invals[1:], {}, trip)
             for o, r in zip(outs, out_ids):
                 self.prog.value_links.append((o, r, 0))
+
+
+# memory addresses in default object reprs ("<function f at 0x7f..>")
+_ADDR_RE = re.compile(r"0x[0-9a-fA-F]{4,}")
+
+
+def _canon(x) -> str:
+    """Deterministic canonical string for an op param value.
+
+    Used by :func:`program_fingerprint`, so the result must be identical
+    across processes and interpreter runs: no ``id()``, no default object
+    ``repr`` (which embeds addresses), no ``hash()`` (salted by
+    PYTHONHASHSEED).  Unknown objects degrade to their type name.
+    """
+    if x is None or isinstance(x, (bool, int, float, str)):
+        return repr(x)
+    if isinstance(x, bytes):
+        return f"bytes:{hashlib.sha256(x).hexdigest()}"
+    if isinstance(x, np.dtype):
+        return f"dtype:{x.name}"
+    if isinstance(x, np.ndarray):
+        return (f"ndarray:{x.shape}:{x.dtype.name}:"
+                f"{hashlib.sha256(np.ascontiguousarray(x).tobytes()).hexdigest()}")
+    if isinstance(x, (tuple, list)):
+        return "[" + ",".join(_canon(e) for e in x) + "]"
+    if isinstance(x, (set, frozenset)):
+        return "{" + ",".join(sorted(_canon(e) for e in x)) + "}"
+    if isinstance(x, dict):
+        items = sorted((_canon(k), _canon(v)) for k, v in x.items())
+        return "{" + ",".join(f"{k}:{v}" for k, v in items) + "}"
+    try:
+        # numpy scalars, jnp dtypes, enums (Precision.DEFAULT), ...
+        if isinstance(x, np.generic):
+            return f"npscalar:{x.dtype.name}:{x!r}"
+        s = str(x)
+    except Exception:                                      # noqa: BLE001
+        s = ""
+    if not s or _ADDR_RE.search(s):
+        return f"<{type(x).__module__}.{type(x).__qualname__}>"
+    return f"{type(x).__qualname__}:{s}"
+
+
+def program_fingerprint(prog: Program) -> str:
+    """Deterministic content hash of a :class:`Program`.
+
+    The fingerprint covers everything the downstream analysis can observe:
+    op primitives and canonicalized params, the operand/result value-id
+    wiring, tensor types, input/output ids, scan/while value links, and
+    trip counts.  It is a pure function of the traced computation — stable
+    across processes, PYTHONHASHSEED values, and re-traces of the same
+    function — which makes it usable as a persistent cache key (see
+    ``repro.ckpt.plan_store``).
+
+    Args:
+        prog: the extracted program to hash.
+
+    Returns:
+        A 64-char hex SHA-256 digest.
+    """
+    h = hashlib.sha256()
+
+    def feed(s: str) -> None:
+        h.update(s.encode())
+        h.update(b"\x00")
+
+    for i, op in enumerate(prog.ops):
+        feed(f"op{i}:{op.prim}")
+        feed(_canon(op.params))
+        feed(_canon(op.operands))
+        feed(_canon(op.results))
+        feed(_canon(op.meta))
+        feed(f"trip:{prog.trip_counts.get(i, 1)}")
+    for vid in sorted(prog.types):
+        t = prog.types[vid]
+        feed(f"v{vid}:{t.shape}:{np.dtype(t.dtype).name}")
+    feed(_canon(prog.inputs))
+    feed(_canon(prog.outputs))
+    feed(_canon(sorted(prog.value_links)))
+    return h.hexdigest()
 
 
 def extract_program(fn, *args, **kwargs) -> Program:

@@ -31,7 +31,7 @@ from repro.core.conflicts import ConflictAnalysis, analyze_conflicts
 from repro.core.cost_model import (CostBreakdown, CostModel, HardwareSpec,
                                    MeshSpec, ShardingState)
 from repro.core.evaluator import IncrementalEvaluator
-from repro.core.ir import Program, extract_program
+from repro.core.ir import Program, extract_program, program_fingerprint
 from repro.core.mcts import MCTSConfig
 from repro.core.nda import NDAResult, run_nda
 from repro.core.search import SearchBackend, get_backend
@@ -39,6 +39,39 @@ from repro.core.search import SearchBackend, get_backend
 
 @dataclasses.dataclass
 class ShardingPlan:
+    """The output of :func:`auto_partition`: a complete sharding decision.
+
+    Attributes:
+        mesh: the logical device mesh the plan was searched for.
+        in_specs: one ``PartitionSpec`` per flattened program input, in
+            ``input_paths`` order.
+        input_paths: pytree key paths of the flattened inputs.
+        state: the canonical search state (color→axes + resolution bits)
+            the specs were projected from.
+        cost: the paper cost ``C(s) = RT(s) + MP(s)`` of ``state``.
+        breakdown: cost-breakdown dict of the plan
+            (compute/memory/collective times, peak bytes, flops, ...).
+        baseline_breakdown: same breakdown for the unsharded program.
+        constraint_specs: specs for conflict-resolved *intermediate*
+            values, keyed by value id (apply via
+            ``with_sharding_constraint``).
+        logical_rules: ``{logical dim name -> mesh axes}`` projection of
+            the plan, when the caller declared ``logical_axes``.
+        search_seconds: wall-clock the pipeline took (0 for cache hits).
+        evaluations: cost queries issued by the search backend.
+        num_colors: NDA colors in the analyzed program.
+        num_conflicts: sharding conflicts found (paper §3.3).
+        num_compat_sets: box-compatibility sets (paper §3.5).
+        num_resolution_bits: supergroup resolution bits (paper §3.6).
+        backend: name of the search backend that produced the plan.
+        eval_stats: evaluator work counters (cache hits / incremental /
+            from-base evaluations).
+        fingerprint: deterministic program fingerprint
+            (:func:`repro.core.ir.program_fingerprint`) when known.
+        cached: True when the plan was served from a
+            ``repro.ckpt.plan_store.PlanStore`` instead of a fresh search.
+    """
+
     mesh: MeshSpec
     in_specs: list[PartitionSpec]
     input_paths: list[str]
@@ -56,27 +89,58 @@ class ShardingPlan:
     num_resolution_bits: int
     backend: str = "mcts"
     eval_stats: dict = dataclasses.field(default_factory=dict)
+    fingerprint: str = ""
+    cached: bool = False
 
     def jax_in_shardings(self, mesh: jax.sharding.Mesh, treedef=None):
+        """Materialize ``in_specs`` as ``NamedSharding``s on ``mesh``.
+
+        Args:
+            mesh: a concrete ``jax.sharding.Mesh`` whose axis names match
+                the plan's ``MeshSpec``.
+            treedef: optional treedef to unflatten the shardings into the
+                original argument structure.
+
+        Returns:
+            A flat list of ``NamedSharding`` (or the unflattened pytree
+            when ``treedef`` is given), suitable for ``jax.jit``'s
+            ``in_shardings``.
+        """
         specs = [NamedSharding(mesh, s) for s in self.in_specs]
         if treedef is not None:
             return jax.tree_util.tree_unflatten(treedef, specs)
         return specs
 
     def spec_for(self, path_substr: str) -> PartitionSpec | None:
+        """Return the spec of the first input whose path contains
+        ``path_substr`` (``None`` when no path matches).
+
+        Args:
+            path_substr: substring matched against ``input_paths``.
+
+        Returns:
+            The matching ``PartitionSpec`` or ``None``.
+        """
         for p, s in zip(self.input_paths, self.in_specs):
             if path_substr in p:
                 return s
         return None
 
-    def to_json(self) -> str:
-        return json.dumps({
-            "mesh": {"axes": self.mesh.axes, "sizes": self.mesh.sizes},
+    def as_dict(self) -> dict:
+        """JSON-serializable dict capturing the full plan (the inverse of
+        :meth:`from_dict`)."""
+        return {
+            "mesh": self.mesh.as_dict(),
             "in_specs": [list(map(_spec_entry, s)) for s in self.in_specs],
             "input_paths": self.input_paths,
+            "state": {"color_axes": [[c, list(axes)] for c, axes in
+                                     self.state.color_axes],
+                      "bits": [list(b) for b in self.state.bits]},
             "cost": self.cost,
             "breakdown": self.breakdown,
             "baseline_breakdown": self.baseline_breakdown,
+            "constraint_specs": {str(vid): list(map(_spec_entry, s))
+                                 for vid, s in self.constraint_specs.items()},
             "logical_rules": {k: list(v) for k, v in
                               self.logical_rules.items()},
             "search_seconds": self.search_seconds,
@@ -87,7 +151,65 @@ class ShardingPlan:
             "num_resolution_bits": self.num_resolution_bits,
             "backend": self.backend,
             "eval_stats": self.eval_stats,
-        }, indent=2)
+            "fingerprint": self.fingerprint,
+        }
+
+    def to_json(self) -> str:
+        """Serialize the plan to a JSON string (see :meth:`as_dict`)."""
+        return json.dumps(self.as_dict(), indent=2)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ShardingPlan":
+        """Rebuild a plan from :meth:`as_dict` output.
+
+        Args:
+            d: a dict produced by :meth:`as_dict` / parsed plan JSON.
+
+        Returns:
+            An equivalent ``ShardingPlan`` (``cached`` is reset to False;
+            the plan store sets it on retrieval).
+        """
+        m = d["mesh"]
+        state_d = d.get("state", {"color_axes": [], "bits": []})
+        return cls(
+            mesh=MeshSpec(tuple(m["axes"]), tuple(m["sizes"]),
+                          tuple(m.get("dcn_axes", ()))),
+            in_specs=[_spec_from_entries(s) for s in d["in_specs"]],
+            input_paths=list(d["input_paths"]),
+            state=ShardingState(
+                tuple((int(c), tuple(axes))
+                      for c, axes in state_d["color_axes"]),
+                tuple((int(sg), int(b)) for sg, b in state_d["bits"])),
+            cost=d["cost"],
+            breakdown=dict(d["breakdown"]),
+            baseline_breakdown=dict(d["baseline_breakdown"]),
+            constraint_specs={int(vid): _spec_from_entries(s)
+                              for vid, s in
+                              d.get("constraint_specs", {}).items()},
+            logical_rules={k: tuple(v) for k, v in
+                           d.get("logical_rules", {}).items()},
+            search_seconds=d["search_seconds"],
+            evaluations=d["evaluations"],
+            num_colors=d["num_colors"],
+            num_conflicts=d["num_conflicts"],
+            num_compat_sets=d["num_compat_sets"],
+            num_resolution_bits=d["num_resolution_bits"],
+            backend=d.get("backend", "mcts"),
+            eval_stats=dict(d.get("eval_stats", {})),
+            fingerprint=d.get("fingerprint", ""),
+        )
+
+    @classmethod
+    def from_json(cls, s: str) -> "ShardingPlan":
+        """Rebuild a plan from a :meth:`to_json` string.
+
+        Args:
+            s: JSON produced by :meth:`to_json`.
+
+        Returns:
+            The reconstructed ``ShardingPlan``.
+        """
+        return cls.from_dict(json.loads(s))
 
 
 def _spec_entry(e):
@@ -96,6 +218,11 @@ def _spec_entry(e):
     if isinstance(e, tuple):
         return list(e)
     return e
+
+
+def _spec_from_entries(entries) -> PartitionSpec:
+    return PartitionSpec(*[tuple(e) if isinstance(e, list) else e
+                           for e in entries])
 
 
 @dataclasses.dataclass
@@ -110,6 +237,16 @@ class ToastArtifacts:
 
 def analyze(fn: Callable, args: tuple, kwargs: dict | None = None
             ) -> ToastArtifacts:
+    """Trace ``fn`` and run the mesh-independent analysis once.
+
+    Args:
+        fn: function to trace (never executed).
+        args: example positional arguments (abstract values suffice).
+        kwargs: example keyword arguments.
+
+    Returns:
+        :class:`ToastArtifacts` reusable across meshes and searches.
+    """
     prog = extract_program(fn, *args, **(kwargs or {}))
     nda = run_nda(prog)
     analysis = analyze_conflicts(nda)
@@ -157,8 +294,16 @@ def _is_name_tuple(x) -> bool:
 
 
 def flatten_logical_axes(names_tree) -> list[tuple[str, ...] | None]:
-    """Flatten a logical-names pytree (tuples of dim names at leaf
-    positions) into the input-leaf order used by ``extract_program``."""
+    """Flatten a logical-names pytree into program-input order.
+
+    Args:
+        names_tree: pytree mirroring the function arguments with tuples
+            of logical dim names (or ``None``) at leaf positions.
+
+    Returns:
+        One names-tuple (or ``None``) per flattened input leaf, in the
+        order used by ``extract_program``.
+    """
     return [x if isinstance(x, tuple) else None
             for x in jax.tree_util.tree_leaves(names_tree,
                                                is_leaf=_is_name_tuple)]
@@ -194,16 +339,72 @@ def auto_partition(fn: Callable, args: tuple, mesh: MeshSpec, *,
                    mcts: MCTSConfig | None = None,
                    backend: str | SearchBackend = "mcts",
                    search_config=None,
+                   portfolio=None,
+                   plan_store=None,
                    min_dims: int = 10,
                    logical_axes: list[tuple[str, ...]] | None = None,
                    artifacts: ToastArtifacts | None = None) -> ShardingPlan:
     """Run the full TOAST pipeline on ``fn(*args, **kwargs)``.
 
-    ``backend`` selects the search strategy ("mcts", "beam", "greedy", or a
-    ``SearchBackend`` instance); ``search_config`` is the backend-specific
-    config (``mcts=`` remains the MCTS-specific alias)."""
+    Traces ``fn`` to a flat tensor program, runs the NDA + conflict
+    analysis, searches for a low-cost sharding with the selected backend,
+    and projects the winning state onto per-input ``PartitionSpec``s.
+
+    Args:
+        fn: the function to partition (a train/serve step).  Only traced,
+            never executed.
+        args: example arguments (``jax.ShapeDtypeStruct`` stand-ins work).
+        mesh: logical device mesh to shard over.
+        kwargs: optional keyword arguments for ``fn``.
+        hw: hardware roofline constants (per-chip FLOPs, HBM, ICI, memory
+            budget).
+        mcts: MCTS-specific config alias (ignored by other backends).
+        backend: search strategy — "mcts" (default), "beam", "greedy",
+            "portfolio", or a ``SearchBackend`` instance.
+        search_config: backend-specific config object (``BeamConfig``,
+            ``PortfolioConfig``, ...).
+        portfolio: convenience switch for the portfolio runner: pass a
+            ``repro.core.portfolio.PortfolioConfig`` (or ``True`` for the
+            default portfolio) instead of setting ``backend`` and
+            ``search_config`` separately.
+        plan_store: a ``repro.ckpt.plan_store.PlanStore`` (or a directory
+            path for one).  When given, a plan cached under this
+            program's fingerprint × ``mesh`` × ``hw`` is returned without
+            searching, and fresh plans are persisted on the way out.
+        min_dims: action-space pruning threshold — colors occurring on
+            fewer dims are not sharded directly (paper uses 10).
+        logical_axes: optional per-input logical dim names (see
+            ``flatten_logical_axes``); enables ``plan.logical_rules``.
+        artifacts: pre-computed analysis artifacts to reuse across
+            meshes/searches (see :func:`analyze`).
+
+    Returns:
+        A :class:`ShardingPlan`; ``plan.cached`` is True when it came from
+        the plan store.
+    """
     t0 = time.perf_counter()
     art = artifacts or analyze(fn, args, kwargs)
+    if portfolio is not None and portfolio is not False:
+        backend = "portfolio"
+        if search_config is None and not isinstance(portfolio, bool):
+            search_config = portfolio
+
+    store = plan_store
+    fingerprint = ""
+    store_params = None
+    if store is not None:
+        if not hasattr(store, "get"):
+            from repro.ckpt.plan_store import PlanStore
+            store = PlanStore(store)
+        fingerprint = program_fingerprint(art.prog)
+        # everything that changes the search outcome beyond the program/
+        # mesh/hw triple must be in the key (the backend deliberately
+        # isn't: reusing another backend's plan is the point)
+        store_params = {"min_dims": min_dims, "logical_axes": logical_axes}
+        hit = store.get(fingerprint, mesh, hw, store_params)
+        if hit is not None:
+            return hit
+
     cm = CostModel(art.prog, art.nda, art.analysis, mesh, hw)
     key = (mesh, min_dims)
     actions = art.actions_by_mesh.get(key)
@@ -219,9 +420,16 @@ def auto_partition(fn: Callable, args: tuple, mesh: MeshSpec, *,
     result = engine.search(evaluator, actions, cfg)
     elapsed = time.perf_counter() - t0
 
+    eval_stats = evaluator.stats.as_dict()
+    if getattr(result, "members", None) is not None:
+        eval_stats["portfolio"] = {
+            "winner": result.winner,
+            "early_stopped": result.early_stopped,
+            "members": [m.as_dict() for m in result.members],
+        }
     specs = _state_specs(cm, result.best_state, art.prog)
     summary = art.nda.color_summary()
-    return ShardingPlan(
+    plan = ShardingPlan(
         mesh=mesh,
         in_specs=specs,
         input_paths=art.prog.input_paths,
@@ -240,5 +448,9 @@ def auto_partition(fn: Callable, args: tuple, mesh: MeshSpec, *,
         num_compat_sets=len(art.analysis.compat_sets),
         num_resolution_bits=art.analysis.num_resolution_bits,
         backend=engine.name,
-        eval_stats=evaluator.stats.as_dict(),
+        eval_stats=eval_stats,
+        fingerprint=fingerprint,
     )
+    if store is not None:
+        store.put(plan, hw, store_params)
+    return plan

@@ -17,6 +17,8 @@ Built-in backends:
 - ``"beam"``   — deterministic beam search over the action DAG; a strong,
   cheap baseline and a regression anchor for MCTS.
 - ``"greedy"`` — beam with width 1 (steepest-descent hill climb).
+- ``"portfolio"`` — a concurrent portfolio of the above over several
+  seeds/budgets with early stopping (``repro.core.portfolio``).
 
 Select with ``auto_partition(..., backend="beam")`` or register custom
 backends via ``register_backend``.
@@ -33,6 +35,19 @@ from repro.core.cost_model import ShardingState
 
 @dataclasses.dataclass
 class SearchResult:
+    """What a search backend returns: the best state found and how.
+
+    Attributes:
+        best_state: cheapest canonical sharding state found.
+        best_cost: its paper cost ``C(s) = RT(s) + MP(s)``.
+        best_actions: one action sequence reaching ``best_state``.
+        rounds_run: backend-defined progress unit (MCTS rounds, beam
+            depths, portfolio members completed).
+        evaluations: cost queries issued, transposition-cache hits
+            included.
+        history: best-known cost after each round.
+    """
+
     best_state: ShardingState
     best_cost: float
     best_actions: list[Action]
@@ -45,17 +60,47 @@ class SearchResult:
 
 
 class SearchBackend:
-    """Interface every search strategy implements."""
+    """Interface every search strategy implements.
+
+    A backend never touches the cost model directly: all costing goes
+    through the evaluator so every strategy benefits from incremental
+    evaluation and the transposition cache for free.  Instances must be
+    safe to reuse across searches (hold no per-search state).
+    """
 
     name = "backend"
 
     def search(self, evaluator, actions: list[Action], config=None,
                root: ShardingState = ShardingState()) -> SearchResult:
+        """Search for a low-cost sharding state.
+
+        Args:
+            evaluator: ``repro.core.evaluator.IncrementalEvaluator`` to
+                cost states with (``paper_cost`` / ``paper_cost_child``).
+            actions: the pruned action space from
+                ``repro.core.actions.build_action_space``.
+            config: backend-specific configuration object; ``None`` means
+                backend defaults.  Backends must raise ``TypeError`` on a
+                config of the wrong type rather than ignore it.
+            root: state the search starts from (default: unsharded).
+
+        Returns:
+            A :class:`SearchResult` for the best state found; the root
+            itself when nothing improves on it.
+        """
         raise NotImplementedError
 
 
 def recover_actions(state: ShardingState) -> list[Action]:
-    """Reconstruct one action sequence reaching a canonical state."""
+    """Reconstruct one action sequence reaching a canonical state.
+
+    Args:
+        state: the canonical sharding state to explain.
+
+    Returns:
+        Actions whose in-order application to the empty state yields
+        ``state`` (resolution bits attached to the first action).
+    """
     ca, bits = state.as_dicts()
     out = []
     bit_items = tuple(sorted(bits.items()))
@@ -69,6 +114,9 @@ def recover_actions(state: ShardingState) -> list[Action]:
 
 @dataclasses.dataclass
 class BeamConfig:
+    """Beam-search knobs: frontier ``width``, ``max_depth`` action levels,
+    and ``patience`` depth levels without improvement before stopping."""
+
     width: int = 8
     max_depth: int = 30
     patience: int = 2          # depth levels without improvement -> stop
@@ -85,6 +133,17 @@ class BeamSearchBackend(SearchBackend):
 
     def search(self, evaluator, actions: list[Action], config=None,
                root: ShardingState = ShardingState()) -> SearchResult:
+        """Run beam search.
+
+        Args:
+            evaluator: ``IncrementalEvaluator`` to cost states with.
+            actions: pruned action space to expand over.
+            config: a :class:`BeamConfig` or ``None`` for defaults.
+            root: state the beam starts from.
+
+        Returns:
+            The :class:`SearchResult` of the cheapest state reached.
+        """
         if config is not None and not isinstance(config, BeamConfig):
             raise TypeError(f"{self.name} backend expects BeamConfig, "
                             f"got {type(config).__name__}")
@@ -134,7 +193,19 @@ _REGISTRY: dict[str, Callable[[], SearchBackend]] = {}
 
 def register_backend(name: str,
                      factory: Callable[[], SearchBackend]) -> None:
+    """Register a search backend for name-based resolution.
+
+    Args:
+        name: backend name (matched case-insensitively by
+            :func:`get_backend` / ``auto_partition(backend=...)``).
+        factory: zero-arg callable producing a fresh backend instance.
+    """
     _REGISTRY[name.lower()] = factory
+
+
+def registered_backends() -> list[str]:
+    """Sorted names of all registered search backends."""
+    return sorted(_REGISTRY)
 
 
 def _make_mcts() -> SearchBackend:
@@ -142,13 +213,30 @@ def _make_mcts() -> SearchBackend:
     return MCTSBackend()
 
 
+def _make_portfolio() -> SearchBackend:
+    from repro.core.portfolio import PortfolioBackend   # lazy: cycle
+    return PortfolioBackend()
+
+
 register_backend("mcts", _make_mcts)
 register_backend("beam", BeamSearchBackend)
 register_backend("greedy", lambda: BeamSearchBackend(width=1, name="greedy"))
+register_backend("portfolio", _make_portfolio)
 
 
 def get_backend(backend) -> SearchBackend:
-    """Resolve a backend instance from a name, factory, or instance."""
+    """Resolve a backend instance from a name, factory, or instance.
+
+    Args:
+        backend: a ``SearchBackend`` instance (returned as-is), a
+            zero-arg factory, or a registered name.
+
+    Returns:
+        A ready-to-use ``SearchBackend``.
+
+    Raises:
+        ValueError: when ``backend`` names no registered backend.
+    """
     if isinstance(backend, SearchBackend):
         return backend
     if callable(backend):

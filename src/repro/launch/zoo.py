@@ -1,0 +1,352 @@
+"""Zoo-wide auto-partitioning driver.
+
+Runs the full TOAST pipeline — trace, NDA, conflict analysis, portfolio
+search — over **every** model in ``repro/configs`` on one mesh, and emits
+a per-model feasibility/cost/search-time table.  This is the paper's
+"diverse model architectures" claim exercised end-to-end: dense
+transformers, GQA, MoE (mixtral, arctic), hybrid attention/RG-LRU
+(recurrentgemma), xLSTM, encoder-decoder audio (whisper) and a VLM
+(phi3_vision) all go through the same driver.
+
+Plans are memoized in a ``repro.ckpt.plan_store.PlanStore`` keyed by
+(program fingerprint, mesh, hardware): a second run over an unchanged zoo
+skips every search and reports cache hits instead.
+
+Usage::
+
+    python -m repro.launch.zoo --mesh 4x2
+    python -m repro.launch.zoo --mesh 4x2            # second run: all cached
+    python -m repro.launch.zoo --mesh 8x4 --backend mcts --no-plan-store
+    python -m benchmarks.run --section zoo           # BENCH_zoo.json only
+
+By default models run in their ``reduced()`` (CPU-smoke) size with a
+small train shape so the whole zoo finishes in well under a minute;
+``--full`` traces the production configs (minutes, trace-only — nothing
+is executed).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+from repro.ckpt.plan_store import PlanStore
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import ShapeConfig
+from repro.core.cost_model import HardwareSpec, MeshSpec
+from repro.core.partitioner import (analyze, auto_partition,
+                                    flatten_logical_axes)
+from repro.core.portfolio import PortfolioConfig, PortfolioMember
+from repro.core.search import BeamConfig
+from repro.launch.specs import step_and_inputs
+
+# axis names by mesh rank, matching the repo's conventions elsewhere
+_AXIS_NAMES = {
+    1: ("model",),
+    2: ("data", "model"),
+    3: ("data", "seq", "model"),
+    4: ("pod", "data", "seq", "model"),
+}
+
+# small train cell used for the sweep (divisible by every supported mesh)
+ZOO_SHAPE = ShapeConfig("zoo_small", seq_len=512, global_batch=8,
+                        kind="train")
+ZOO_SHAPE_FULL = ShapeConfig("zoo_full", seq_len=4096, global_batch=256,
+                             kind="train")
+
+
+def zoo_portfolio(seeds: int = 2, workers: int | None = 2
+                  ) -> PortfolioConfig:
+    """The zoo's default search portfolio: cheap members, early stop.
+
+    Cheap deterministic members (greedy, narrow beam) are listed first so
+    their results arrive early; MCTS seeds follow and are cancelled when
+    the feasible cost has already plateaued.  The search is GIL-bound, so
+    a small worker count costs no wall-clock and leaves members queued
+    (cancellable).
+
+    Args:
+        seeds: number of MCTS members.
+        workers: thread-pool size (``None`` = one per member).
+
+    Returns:
+        A :class:`PortfolioConfig` for ``auto_partition``.
+    """
+    from repro.core.mcts import MCTSConfig
+    members = [
+        PortfolioMember("greedy", config=BeamConfig(patience=1)),
+        PortfolioMember("beam", config=BeamConfig(width=4, patience=1)),
+    ]
+    members += [
+        PortfolioMember("mcts", seed=s,
+                        config=MCTSConfig(seed=s, rounds=4,
+                                          trajectories_per_round=16))
+        for s in range(seeds)
+    ]
+    return PortfolioConfig(members=tuple(members), max_workers=workers,
+                           patience=2)
+
+
+def parse_mesh(spec: str) -> MeshSpec:
+    """Parse a ``"4x2"``-style mesh string into a :class:`MeshSpec`.
+
+    Args:
+        spec: ``x``-separated axis sizes, e.g. ``"4x2"`` or ``"2x4x2"``;
+            1–4 axes are named per the repo convention
+            (``data``/``model``, then ``seq``, then ``pod``).
+
+    Returns:
+        The corresponding ``MeshSpec`` (``pod`` marked as a DCN axis).
+    """
+    sizes = tuple(int(s) for s in spec.lower().split("x"))
+    if not sizes or any(s < 1 for s in sizes):
+        raise ValueError(f"bad mesh spec {spec!r}")
+    names = _AXIS_NAMES.get(len(sizes))
+    if names is None:
+        raise ValueError(f"mesh spec {spec!r} has {len(sizes)} axes; "
+                         f"supported: 1-4")
+    dcn = ("pod",) if "pod" in names else ()
+    return MeshSpec(names, sizes, dcn)
+
+
+def run_model(arch: str, mesh: MeshSpec, *,
+              shape: ShapeConfig = ZOO_SHAPE,
+              hw: HardwareSpec = HardwareSpec(),
+              backend: str = "portfolio",
+              search_config=None,
+              plan_store: PlanStore | None = None,
+              full: bool = False,
+              min_dims: int = 10) -> dict:
+    """Auto-partition one zoo model and summarize the outcome.
+
+    Args:
+        arch: config module name from ``repro.configs.ARCH_IDS``.
+        mesh: mesh to shard over.
+        shape: train cell (seq len / global batch) to trace.
+        hw: hardware roofline constants.
+        backend: search backend name ("portfolio" by default).
+        search_config: backend-specific config (portfolio/MCTS/beam).
+        plan_store: optional persistent plan cache.
+        full: trace the production config instead of ``reduced()``.
+        min_dims: action-space pruning threshold.
+
+    Returns:
+        A flat JSON-friendly result row; ``row["status"]`` is ``"ok"`` or
+        ``"error"`` (with ``row["error"]`` set).
+    """
+    cfg = get_config(arch)
+    if not full:
+        cfg = cfg.reduced()
+    row = {"model": arch, "family": cfg.family,
+           "params_m": round(cfg.num_params() / 1e6, 2),
+           "status": "ok", "mesh": "x".join(map(str, mesh.sizes))}
+    t0 = time.perf_counter()
+    try:
+        fn, args, names = step_and_inputs(cfg, shape)
+        art = analyze(fn, args)
+        t_analysis = time.perf_counter() - t0
+        plan = auto_partition(
+            fn, args, mesh, hw=hw, backend=backend,
+            search_config=search_config,
+            logical_axes=flatten_logical_axes(names),
+            plan_store=plan_store, min_dims=min_dims, artifacts=art)
+    except Exception as e:                      # noqa: BLE001
+        row.update(status="error", error=repr(e),
+                   traceback=traceback.format_exc(limit=5))
+        return row
+    base, bd = plan.baseline_breakdown, plan.breakdown
+    pf = plan.eval_stats.get("portfolio", {})
+    row.update(
+        ops=len(art.prog.ops),
+        colors=plan.num_colors,
+        conflicts=plan.num_conflicts,
+        compat_sets=plan.num_compat_sets,
+        resolution_bits=plan.num_resolution_bits,
+        analysis_s=round(t_analysis, 3),
+        search_s=round(plan.search_seconds, 3),
+        evaluations=plan.evaluations,
+        cost=round(plan.cost, 6),
+        speedup=round(base["runtime"] / max(bd["runtime"], 1e-12), 2),
+        peak_gb=round(bd["peak_bytes"] / 2**30, 4),
+        feasible=bool(bd["peak_bytes"] <= hw.hbm_per_chip),
+        backend=plan.backend,
+        winner=pf.get("winner", plan.backend),
+        cached=plan.cached,
+        fingerprint=plan.fingerprint[:12],
+        rules={k: list(v) for k, v in plan.logical_rules.items()},
+    )
+    return row
+
+
+def run_zoo(mesh: MeshSpec, *, archs: tuple[str, ...] | None = None,
+            shape: ShapeConfig | None = None,
+            hw: HardwareSpec = HardwareSpec(),
+            backend: str = "portfolio",
+            search_config=None,
+            plan_store: PlanStore | None = None,
+            full: bool = False,
+            min_dims: int = 10,
+            verbose: bool = True) -> dict:
+    """Sweep the whole config zoo on one mesh.
+
+    Args:
+        mesh: mesh to shard every model over.
+        archs: subset of ``ARCH_IDS`` (default: all).
+        shape: train cell; defaults to the small zoo cell (or the 4k cell
+            with ``full=True``).
+        hw: hardware roofline constants.
+        backend: search backend for every model.
+        search_config: backend-specific config shared by all models.
+        plan_store: persistent plan cache (hits skip the search).
+        full: use production configs instead of ``reduced()``.
+        min_dims: action-space pruning threshold.
+        verbose: print progress lines as models finish.
+
+    Returns:
+        The sweep record: ``{"mesh", "shape", "backend", "results": [...],
+        "cache", "total_seconds"}`` — the same dict written to
+        ``BENCH_zoo.json``.
+    """
+    archs = tuple(archs or ARCH_IDS)
+    shape = shape or (ZOO_SHAPE_FULL if full else ZOO_SHAPE)
+    if backend == "portfolio" and search_config is None:
+        search_config = zoo_portfolio()
+    t0 = time.perf_counter()
+    rows = []
+    for arch in archs:
+        t = time.perf_counter()
+        row = run_model(arch, mesh, shape=shape, hw=hw, backend=backend,
+                        search_config=search_config, plan_store=plan_store,
+                        full=full, min_dims=min_dims)
+        rows.append(row)
+        if verbose:
+            if row["status"] == "ok":
+                src = "cache" if row["cached"] else row["winner"]
+                print(f"[{arch:>16}] cost={row['cost']:.4f} "
+                      f"speedup={row['speedup']:5.2f}x "
+                      f"feasible={'Y' if row['feasible'] else 'N'} "
+                      f"{src:<10} {time.perf_counter() - t:5.2f}s",
+                      flush=True)
+            else:
+                print(f"[{arch:>16}] ERROR {row['error']}", flush=True)
+    record = {
+        "mesh": mesh.as_dict(),
+        "shape": {"seq_len": shape.seq_len,
+                  "global_batch": shape.global_batch, "kind": shape.kind},
+        "backend": backend,
+        "full_configs": full,
+        "results": rows,
+        "cache": plan_store.stats.as_dict() if plan_store is not None
+        else None,
+        "total_seconds": round(time.perf_counter() - t0, 2),
+    }
+    return record
+
+
+_COLUMNS = ("model", "family", "ops", "colors", "conflicts",
+            "resolution_bits", "feasible", "cost", "speedup", "peak_gb",
+            "search_s", "evaluations", "winner", "cached")
+
+
+def format_table(rows: list[dict]) -> str:
+    """Render sweep rows as an aligned feasibility/cost/time table.
+
+    Args:
+        rows: result rows from :func:`run_zoo` / :func:`run_model`.
+
+    Returns:
+        A printable multi-line table string.
+    """
+    def cell(row, col):
+        if row["status"] != "ok":
+            return "ERROR" if col == "cost" else (
+                row["model"] if col == "model" else "-")
+        v = row.get(col, "-")
+        if isinstance(v, bool):
+            return "yes" if v else "NO"
+        if isinstance(v, float):
+            return f"{v:.4f}" if col == "cost" else f"{v:.2f}"
+        return str(v)
+
+    table = [[c for c in _COLUMNS]]
+    table += [[cell(r, c) for c in _COLUMNS] for r in rows]
+    widths = [max(len(row[i]) for row in table)
+              for i in range(len(_COLUMNS))]
+    lines = []
+    for j, row in enumerate(table):
+        lines.append("  ".join(c.rjust(w) for c, w in zip(row, widths)))
+        if j == 0:
+            lines.append("  ".join("-" * w for w in widths))
+    return "\n".join(lines)
+
+
+def main(argv: list[str] | None = None) -> dict:
+    """CLI entry point; returns the sweep record it wrote.
+
+    Args:
+        argv: argument list (defaults to ``sys.argv[1:]``).
+
+    Returns:
+        The :func:`run_zoo` record (also written to ``--out``).
+    """
+    ap = argparse.ArgumentParser(
+        description="Auto-partition every zoo config on one mesh.")
+    ap.add_argument("--mesh", default="4x2",
+                    help="mesh sizes, e.g. 4x2 or 2x4x2")
+    ap.add_argument("--archs", default=",".join(ARCH_IDS),
+                    help="comma-separated subset of the zoo")
+    ap.add_argument("--backend", default="portfolio",
+                    help="search backend (portfolio | mcts | beam | "
+                         "greedy)")
+    ap.add_argument("--seeds", type=int, default=2,
+                    help="MCTS seeds in the default portfolio")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="portfolio thread-pool size")
+    ap.add_argument("--full", action="store_true",
+                    help="production configs instead of reduced()")
+    ap.add_argument("--min-dims", type=int, default=10)
+    ap.add_argument("--plan-store", default="results/plan_store",
+                    help="plan cache directory")
+    ap.add_argument("--no-plan-store", action="store_true",
+                    help="disable the plan cache")
+    ap.add_argument("--out", default="BENCH_zoo.json")
+    args = ap.parse_args(argv)
+
+    mesh = parse_mesh(args.mesh)
+    store = None if args.no_plan_store else PlanStore(args.plan_store)
+    search_config = None
+    if args.backend == "portfolio":
+        search_config = zoo_portfolio(seeds=args.seeds,
+                                      workers=args.workers or 2)
+
+    record = run_zoo(mesh, archs=tuple(args.archs.split(",")),
+                     backend=args.backend, search_config=search_config,
+                     plan_store=store, full=args.full,
+                     min_dims=args.min_dims)
+
+    print()
+    print(format_table(record["results"]))
+    ok = [r for r in record["results"] if r["status"] == "ok"]
+    feasible = sum(r["feasible"] for r in ok)
+    line = (f"\n{len(ok)}/{len(record['results'])} models partitioned, "
+            f"{feasible} feasible, "
+            f"total {record['total_seconds']}s")
+    if store is not None:
+        s = store.stats
+        line += (f" | plan store: {s.hits} hits / {s.misses} misses "
+                 f"({args.plan_store})")
+    print(line)
+
+    out = pathlib.Path(args.out)
+    out.write_text(json.dumps(record, indent=2))
+    print(f"wrote {out}")
+    if any(r["status"] != "ok" for r in record["results"]):
+        raise SystemExit(1)
+    return record
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,238 @@
+"""Plan persistence + program-fingerprint determinism tests.
+
+Covers: ShardingPlan JSON round-trip, PlanStore round-trip, cache hit on
+identical (program, mesh) and miss on changed mesh/hardware, and the
+regression that ``program_fingerprint`` is deterministic across processes
+(no ``id()``-based or hash-seed-dependent keys).
+"""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.ckpt.plan_store import PlanStore, plan_key
+from repro.core.cost_model import HardwareSpec, MeshSpec
+from repro.core.ir import extract_program, program_fingerprint
+from repro.core.mcts import MCTSConfig
+from repro.core.partitioner import ShardingPlan, analyze, auto_partition
+
+
+def sh(*s):
+    return jax.ShapeDtypeStruct(s, jnp.float32)
+
+
+def mlp(x, w1, w2):
+    return jax.nn.relu(x @ w1) @ w2
+
+
+MLP_ARGS = (sh(1024, 512), sh(512, 2048), sh(2048, 512))
+MESH = MeshSpec(("data", "model"), (4, 4))
+FAST = MCTSConfig(rounds=3, trajectories_per_round=12)
+
+
+@pytest.fixture(scope="module")
+def mlp_art():
+    return analyze(mlp, MLP_ARGS)
+
+
+@pytest.fixture(scope="module")
+def mlp_plan(mlp_art):
+    return auto_partition(mlp, MLP_ARGS, MESH, min_dims=1,
+                          artifacts=mlp_art, mcts=FAST,
+                          logical_axes=[("batch", "embed"),
+                                        ("embed", "hidden"),
+                                        ("hidden", "embed")])
+
+
+# --- fingerprint ------------------------------------------------------------
+
+
+class TestFingerprint:
+    def test_stable_across_retraces(self):
+        a = program_fingerprint(extract_program(mlp, *MLP_ARGS))
+        b = program_fingerprint(extract_program(mlp, *MLP_ARGS))
+        assert a == b
+
+    def test_sensitive_to_shapes(self):
+        a = program_fingerprint(extract_program(mlp, *MLP_ARGS))
+        c = program_fingerprint(extract_program(
+            mlp, sh(1024, 512), sh(512, 1024), sh(1024, 512)))
+        assert a != c
+
+    def test_sensitive_to_program_structure(self):
+        def mlp2(x, w1, w2):
+            return jax.nn.gelu(x @ w1) @ w2
+
+        a = program_fingerprint(extract_program(mlp, *MLP_ARGS))
+        b = program_fingerprint(extract_program(mlp2, *MLP_ARGS))
+        assert a != b
+
+    def test_scan_program_stable(self):
+        def scanfn(xs, c0):
+            def body(c, x):
+                return c + x @ x.T, c.sum()
+            return jax.lax.scan(body, c0, xs)
+
+        args = (sh(4, 8, 8), sh(8, 8))
+        a = program_fingerprint(extract_program(scanfn, *args))
+        b = program_fingerprint(extract_program(scanfn, *args))
+        assert a == b
+
+    def test_cross_process_deterministic(self):
+        """Regression: no ``id()``/``hash()``-derived key components —
+        a fresh interpreter with a different PYTHONHASHSEED must compute
+        the identical fingerprint."""
+        local = program_fingerprint(extract_program(mlp, *MLP_ARGS))
+        script = (
+            "import jax, jax.numpy as jnp\n"
+            "from repro.core.ir import extract_program, "
+            "program_fingerprint\n"
+            "sh = lambda *s: jax.ShapeDtypeStruct(s, jnp.float32)\n"
+            "def mlp(x, w1, w2):\n"
+            "    return jax.nn.relu(x @ w1) @ w2\n"
+            "print(program_fingerprint(extract_program(mlp, "
+            "sh(1024, 512), sh(512, 2048), sh(2048, 512))))\n"
+        )
+        env = dict(os.environ)
+        env["PYTHONHASHSEED"] = "12345"
+        env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+        out = subprocess.run([sys.executable, "-c", script], env=env,
+                             capture_output=True, text=True, check=True)
+        assert out.stdout.strip().splitlines()[-1] == local
+
+    def test_no_memory_addresses_in_key(self, mlp_art):
+        fp = program_fingerprint(mlp_art.prog)
+        assert len(fp) == 64 and int(fp, 16) >= 0
+
+
+# --- ShardingPlan round-trip ------------------------------------------------
+
+
+class TestPlanRoundTrip:
+    def test_json_round_trip(self, mlp_plan):
+        p2 = ShardingPlan.from_json(mlp_plan.to_json())
+        assert p2.mesh == mlp_plan.mesh
+        assert p2.in_specs == mlp_plan.in_specs
+        assert p2.input_paths == mlp_plan.input_paths
+        assert p2.state == mlp_plan.state
+        assert p2.cost == mlp_plan.cost
+        assert p2.breakdown == mlp_plan.breakdown
+        assert p2.baseline_breakdown == mlp_plan.baseline_breakdown
+        assert p2.constraint_specs == mlp_plan.constraint_specs
+        assert p2.logical_rules == mlp_plan.logical_rules
+        assert p2.num_resolution_bits == mlp_plan.num_resolution_bits
+        assert p2.backend == mlp_plan.backend
+
+    def test_round_trip_preserves_tuple_specs(self, mlp_art):
+        """Multi-axis PartitionSpec entries (tuples) survive JSON."""
+        from jax.sharding import PartitionSpec
+        plan = auto_partition(mlp, MLP_ARGS, MESH, min_dims=1,
+                              artifacts=mlp_art, mcts=FAST)
+        plan.in_specs[0] = PartitionSpec(("data", "model"), None)
+        p2 = ShardingPlan.from_json(plan.to_json())
+        assert p2.in_specs[0] == PartitionSpec(("data", "model"), None)
+
+    def test_store_round_trip(self, mlp_plan, tmp_path):
+        store = PlanStore(tmp_path)
+        plan = ShardingPlan.from_json(mlp_plan.to_json())
+        plan.fingerprint = "f" * 64
+        store.put(plan)
+        got = store.get("f" * 64, plan.mesh)
+        assert got is not None and got.cached
+        assert got.state == plan.state
+        assert got.in_specs == plan.in_specs
+        assert got.cost == plan.cost
+
+
+# --- cache behaviour --------------------------------------------------------
+
+
+class TestPlanCache:
+    def test_hit_on_identical_program_and_mesh(self, mlp_art, tmp_path):
+        store = PlanStore(tmp_path)
+        p1 = auto_partition(mlp, MLP_ARGS, MESH, min_dims=1,
+                            artifacts=mlp_art, mcts=FAST, plan_store=store)
+        assert not p1.cached and p1.fingerprint
+        p2 = auto_partition(mlp, MLP_ARGS, MESH, min_dims=1,
+                            artifacts=mlp_art, mcts=FAST, plan_store=store)
+        assert p2.cached
+        assert p2.search_seconds == 0.0
+        assert p2.state == p1.state and p2.cost == p1.cost
+        assert store.stats.hits == 1 and store.stats.puts == 1
+
+    def test_miss_on_changed_mesh(self, mlp_art, tmp_path):
+        store = PlanStore(tmp_path)
+        auto_partition(mlp, MLP_ARGS, MESH, min_dims=1, artifacts=mlp_art,
+                       mcts=FAST, plan_store=store)
+        other = MeshSpec(("data", "model"), (8, 2))
+        p = auto_partition(mlp, MLP_ARGS, other, min_dims=1,
+                           artifacts=mlp_art, mcts=FAST, plan_store=store)
+        assert not p.cached
+        assert len(store) == 2
+
+    def test_miss_on_changed_hardware(self, mlp_art, tmp_path):
+        store = PlanStore(tmp_path)
+        auto_partition(mlp, MLP_ARGS, MESH, min_dims=1, artifacts=mlp_art,
+                       mcts=FAST, plan_store=store)
+        hw = HardwareSpec(hbm_per_chip=8e9)
+        p = auto_partition(mlp, MLP_ARGS, MESH, hw=hw, min_dims=1,
+                           artifacts=mlp_art, mcts=FAST, plan_store=store)
+        assert not p.cached
+
+    def test_store_accepts_directory_path(self, mlp_art, tmp_path):
+        d = tmp_path / "plans"
+        p1 = auto_partition(mlp, MLP_ARGS, MESH, min_dims=1,
+                            artifacts=mlp_art, mcts=FAST,
+                            plan_store=str(d))
+        p2 = auto_partition(mlp, MLP_ARGS, MESH, min_dims=1,
+                            artifacts=mlp_art, mcts=FAST,
+                            plan_store=str(d))
+        assert not p1.cached and p2.cached
+
+    def test_miss_on_changed_min_dims(self, mlp_art, tmp_path):
+        """Regression: request params that change the action space must
+        be part of the cache key — a finer min_dims re-searches."""
+        store = PlanStore(tmp_path)
+        auto_partition(mlp, MLP_ARGS, MESH, min_dims=10, artifacts=mlp_art,
+                       mcts=FAST, plan_store=store)
+        p = auto_partition(mlp, MLP_ARGS, MESH, min_dims=1,
+                           artifacts=mlp_art, mcts=FAST, plan_store=store)
+        assert not p.cached
+        assert len(store) == 2
+
+    def test_miss_on_changed_logical_axes(self, mlp_art, tmp_path):
+        store = PlanStore(tmp_path)
+        auto_partition(mlp, MLP_ARGS, MESH, min_dims=1, artifacts=mlp_art,
+                       mcts=FAST, plan_store=store)
+        p = auto_partition(mlp, MLP_ARGS, MESH, min_dims=1,
+                           artifacts=mlp_art, mcts=FAST, plan_store=store,
+                           logical_axes=[("batch", "embed"),
+                                         ("embed", "hidden"),
+                                         ("hidden", "embed")])
+        assert not p.cached and p.logical_rules
+
+    def test_corrupt_entry_is_a_miss(self, mlp_art, tmp_path):
+        store = PlanStore(tmp_path)
+        p1 = auto_partition(mlp, MLP_ARGS, MESH, min_dims=1,
+                            artifacts=mlp_art, mcts=FAST, plan_store=store)
+        params = {"min_dims": 1, "logical_axes": None}
+        key = plan_key(p1.fingerprint, MESH, HardwareSpec(), params)
+        (tmp_path / f"{key}.json").write_text("{not json")
+        assert store.get(p1.fingerprint, MESH, params=params) is None
+        # parseable JSON with a malformed plan is also a miss, not a crash
+        (tmp_path / f"{key}.json").write_text('{"plan": {"mesh": null}}')
+        assert store.get(p1.fingerprint, MESH, params=params) is None
+
+    def test_key_differs_by_all_components(self):
+        k = plan_key("a" * 64, MESH)
+        assert k != plan_key("b" * 64, MESH)
+        assert k != plan_key("a" * 64, MeshSpec(("data", "model"), (2, 8)))
+        assert k != plan_key("a" * 64, MESH,
+                             HardwareSpec(hbm_per_chip=1.0))
+        assert k != plan_key("a" * 64, MESH, None, {"min_dims": 2})
+        assert plan_key("a" * 64, MESH, None, {}) == \
+            plan_key("a" * 64, MESH, None)
