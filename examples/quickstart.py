@@ -1,13 +1,23 @@
 """Quickstart: auto-partition a model with TOAST in ~20 lines.
 
+Stage once (``Session``), request a plan (``Request``), and install it —
+``plan.apply`` returns a jitted function carrying both the searched
+input shardings and the projected output shardings.
+
     PYTHONPATH=src python examples/quickstart.py
 """
-import jax
-import jax.numpy as jnp
+import os
+# 32 fake host devices so plan.apply can build the 8x4 mesh on CPU
+# (must precede the first jax import; examples run as standalone scripts)
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=32")
 
-from repro.core.cost_model import MeshSpec, HardwareSpec
-from repro.core.mcts import MCTSConfig
-from repro.core.partitioner import auto_partition
+import jax                                                  # noqa: E402
+import jax.numpy as jnp                                     # noqa: E402
+
+from repro.api import Request, Session                      # noqa: E402
+from repro.core.cost_model import HardwareSpec, MeshSpec    # noqa: E402
+from repro.core.mcts import MCTSConfig                      # noqa: E402
 
 
 def attention(x, wq, wk, wv):
@@ -20,12 +30,17 @@ S, D = 16384, 512
 sh = lambda *s: jax.ShapeDtypeStruct(s, jnp.float32)
 args = (sh(S, D), sh(D, D), sh(D, D), sh(D, D))
 
+# trace + NDA + conflict analysis run exactly once, reusable across
+# meshes, backends, and constraint sets
+sess = Session(attention, args)
+
 # 32-way mesh, tight per-device memory: the [S, S] score matrix (1 GiB)
 # cannot live on one device — TOAST must discover sequence sharding.
-mesh = MeshSpec(("seq", "model"), (8, 4))
-plan = auto_partition(attention, args, mesh, min_dims=1,
-                      hw=HardwareSpec(hbm_per_chip=5e8),
-                      mcts=MCTSConfig(rounds=8))
+plan = sess.partition(Request(
+    mesh=MeshSpec(("seq", "model"), (8, 4)),
+    hw=HardwareSpec(hbm_per_chip=5e8),
+    min_dims=1,
+    search_config=MCTSConfig(rounds=8)))
 
 print(f"colors={plan.num_colors} conflicts={plan.num_conflicts} "
       f"compat_sets={plan.num_compat_sets} "
@@ -43,3 +58,10 @@ print("\nconflict resolutions applied to intermediates "
       "(sequence sharding of the score matrix):")
 for vid, spec in plan.constraint_specs.items():
     print(f"  value %{vid}: {spec}")
+
+# install the plan: jit with the searched input AND output shardings
+step = plan.apply(attention)
+out = step(*(jnp.ones(a.shape, a.dtype) for a in args))
+assert out.sharding.spec == plan.out_specs[0]
+print(f"\nplan.apply: compiled on {len(jax.devices())} devices, "
+      f"output sharding {out.sharding.spec}")

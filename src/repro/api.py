@@ -1,0 +1,318 @@
+"""Staged public API: ``Session`` / ``Request`` / ``Constraint``.
+
+TOAST's pipeline has two very different halves: the **analysis**
+(trace → NDA → conflicts) is a property of the function alone and is
+expensive enough to do exactly once, while the **search** is cheap,
+mesh-dependent, and worth re-running per mesh / hardware / constraint
+set.  The staged API makes that split explicit::
+
+    from repro.api import Session, Request, Pin, Replicate
+
+    sess = Session(train_step, (params, batch))      # analyze once
+    plan = sess.partition(Request(
+        mesh=MeshSpec(("data", "model"), (16, 16)),
+        constraints=[Pin("batch", "data"),           # batch dim on data
+                     Replicate("*kv_cache*")],       # never shard the cache
+        logical_axes=names))
+    step = plan.apply(train_step)                    # jit, in+out shardings
+
+- :class:`Session` traces and analyzes the function **once**; every
+  ``partition`` call reuses the artifacts (and per-mesh cost-model /
+  action-space caches) across meshes, backends and constraint sets.
+- :class:`Request` is a frozen, declarative description of one
+  partitioning problem: mesh, hardware, backend + config, ``min_dims``
+  pruning, logical dim names, and user constraints.  Requests hash into
+  the plan store's cache key (constraints included), so identical
+  requests on an unchanged program are file reads.
+- Constraints (``Pin`` / ``Replicate`` / ``Forbid``,
+  ``repro.core.constraints``) are enforced structurally — they seed the
+  search root and prune the action space, so **every** backend (mcts,
+  beam, greedy, portfolio, custom) inherits them for free — and
+  defensively: the evaluator marks violating states infeasible, and the
+  finished plan is re-checked spec-level before it is returned.
+
+``repro.core.partitioner.auto_partition`` remains as a thin one-shot
+wrapper over this module.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+from repro.core.actions import DEFAULT_MIN_DIMS, build_action_space
+from repro.core.constraints import (Constraint, ConstraintError,  # noqa: F401
+                                    ConstraintSet, Forbid, Pin, Replicate,
+                                    compile_constraints)
+from repro.core.cost_model import (CostModel, HardwareSpec, MeshSpec,
+                                   ShardingState)
+from repro.core.evaluator import IncrementalEvaluator
+from repro.core.ir import program_fingerprint
+from repro.core.partitioner import (ShardingPlan, ToastArtifacts,  # noqa: F401
+                                    _constraint_specs, _logical_rules,
+                                    _state_specs, analyze,
+                                    flatten_logical_axes)
+from repro.core.search import SearchBackend, get_backend
+
+__all__ = [
+    "Constraint", "ConstraintError", "Forbid", "Pin", "Replicate",
+    "Request", "Session", "ShardingPlan",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """A declarative description of one partitioning problem.
+
+    Frozen and value-like: two equal requests on one session produce the
+    same plan (modulo backend nondeterminism), and the request's
+    canonical parameters — ``min_dims``, ``logical_axes``, and the
+    ``constraints`` — key the persistent plan store.  The search
+    *backend* is deliberately not part of the cache key: reusing a plan
+    another backend found is the point of the store.
+
+    Attributes:
+        mesh: logical device mesh to shard over.
+        hw: hardware roofline constants (per-chip FLOPs, HBM, ICI,
+            memory budget).
+        backend: search strategy — "mcts" (default), "beam", "greedy",
+            "portfolio", or a ``SearchBackend`` instance.
+        search_config: backend-specific config (``MCTSConfig``,
+            ``BeamConfig``, ``PortfolioConfig``, ...); ``None`` means
+            backend defaults.
+        min_dims: action-space pruning threshold — colors occurring on
+            fewer dims are not sharded directly (paper uses 10).
+        logical_axes: per-input logical dim names — a pytree mirroring
+            the session's arguments with name tuples at the leaves, or
+            the already-flat list ``flatten_logical_axes`` produces.
+            Enables ``plan.logical_rules`` and logical-name constraint
+            targets.
+        constraints: ``Pin`` / ``Replicate`` / ``Forbid`` constraints
+            the plan must satisfy.
+    """
+
+    mesh: MeshSpec
+    hw: HardwareSpec = HardwareSpec()
+    backend: str | SearchBackend = "mcts"
+    search_config: Any = None
+    min_dims: int = DEFAULT_MIN_DIMS
+    logical_axes: Any = None
+    constraints: tuple[Constraint, ...] = ()
+
+    def __post_init__(self) -> None:
+        """Normalize mutable spellings (constraint lists) to tuples."""
+        if not isinstance(self.constraints, tuple):
+            object.__setattr__(self, "constraints",
+                               tuple(self.constraints))
+
+    def flat_logical_axes(self) -> list[tuple[str, ...] | None] | None:
+        """The request's ``logical_axes`` flattened to program-input order.
+
+        Returns:
+            One names-tuple (or ``None``) per input leaf, or ``None``
+            when the request declares no logical axes.
+        """
+        if self.logical_axes is None:
+            return None
+        return flatten_logical_axes(self.logical_axes)
+
+    def store_params(self) -> dict:
+        """The request parameters that key the plan store.
+
+        Everything that changes the search *outcome* beyond the
+        program × mesh × hardware triple: ``min_dims``, the canonical
+        ``logical_axes``, and the canonical ``constraints``.  See
+        ``repro.ckpt.plan_store.canonical_request_params``.
+
+        Returns:
+            A params dict for ``PlanStore.get`` / ``PlanStore.put``.
+        """
+        return {"min_dims": self.min_dims,
+                "logical_axes": self.flat_logical_axes(),
+                "constraints": self.constraints}
+
+
+class Session:
+    """One traced-and-analyzed function, ready for staged partitioning.
+
+    Construction runs the expensive, mesh-independent half of the
+    pipeline exactly once: trace ``fn`` to the flat tensor IR, run the
+    NDA, and build the conflict analysis.  Every :meth:`partition` call
+    then only pays for the (cheap, incremental) search — cost models and
+    action spaces are cached per mesh inside the session, and the
+    deterministic program fingerprint is computed once and stamped on
+    every plan.
+    """
+
+    def __init__(self, fn: Callable, args: tuple = (), *,
+                 kwargs: dict | None = None,
+                 artifacts: ToastArtifacts | None = None,
+                 plan_store=None) -> None:
+        """Trace and analyze ``fn`` once.
+
+        Args:
+            fn: the function to partition (a train/serve step).  Only
+                traced, never executed.
+            args: example positional arguments
+                (``jax.ShapeDtypeStruct`` stand-ins work).
+            kwargs: example keyword arguments.
+            artifacts: pre-computed :func:`repro.core.partitioner.analyze`
+                artifacts to adopt instead of re-analyzing.
+            plan_store: default ``repro.ckpt.plan_store.PlanStore`` (or
+                directory path) consulted by every :meth:`partition`
+                call; per-call override available.
+        """
+        self.fn = fn
+        self.args = args
+        self.kwargs = kwargs
+        t0 = time.perf_counter()
+        self.artifacts = artifacts or analyze(fn, args, kwargs)
+        self.analysis_seconds = time.perf_counter() - t0
+        self.plan_store = plan_store
+        self._fingerprint: str | None = None
+        self._cost_models: dict[tuple[MeshSpec, HardwareSpec],
+                                CostModel] = {}
+
+    @property
+    def fingerprint(self) -> str:
+        """Deterministic program fingerprint (computed once, memoized)."""
+        if self._fingerprint is None:
+            self._fingerprint = program_fingerprint(self.artifacts.prog)
+        return self._fingerprint
+
+    def _cost_model(self, mesh: MeshSpec, hw: HardwareSpec) -> CostModel:
+        key = (mesh, hw)
+        cm = self._cost_models.get(key)
+        if cm is None:
+            art = self.artifacts
+            cm = CostModel(art.prog, art.nda, art.analysis, mesh, hw)
+            self._cost_models[key] = cm
+        return cm
+
+    def _actions(self, mesh: MeshSpec, min_dims: int) -> list:
+        art = self.artifacts
+        key = (mesh, min_dims)
+        actions = art.actions_by_mesh.get(key)
+        if actions is None:
+            actions = build_action_space(art.nda, art.analysis, mesh,
+                                         min_dims=min_dims)
+            art.actions_by_mesh[key] = actions
+        return actions
+
+    def compile_constraints(self, request: Request) -> ConstraintSet | None:
+        """Lower the request's constraints onto this program's colors.
+
+        Args:
+            request: the request whose constraints to compile.
+
+        Returns:
+            The compiled ``ConstraintSet``, or ``None`` when the request
+            carries no constraints.
+
+        Raises:
+            ConstraintError: on malformed or unsatisfiable constraints.
+        """
+        if not request.constraints:
+            return None
+        art = self.artifacts
+        return compile_constraints(request.constraints, art.nda, art.prog,
+                                   request.flat_logical_axes(),
+                                   request.mesh)
+
+    def partition(self, request: Request, *, plan_store=None
+                  ) -> ShardingPlan:
+        """Solve one partitioning request against this session's program.
+
+        Constraints are enforced structurally — the search starts from a
+        root state carrying every pin and the action space is pruned to
+        the constrained subspace, so every backend inherits them — and
+        the finished plan is re-checked before it is returned.
+
+        Args:
+            request: the partitioning problem to solve.
+            plan_store: per-call plan store override (a ``PlanStore`` or
+                directory path); defaults to the session's.
+
+        Returns:
+            A :class:`ShardingPlan` satisfying ``request.constraints``;
+            ``plan.cached`` is True when it came from the plan store.
+
+        Raises:
+            ConstraintError: when the constraints are unsatisfiable or
+                the searched plan fails the final spec-level check.
+        """
+        t0 = time.perf_counter()
+        art = self.artifacts
+        flat_names = request.flat_logical_axes()
+        if flat_names is not None and \
+                len(flat_names) != len(art.prog.inputs):
+            raise ValueError(
+                f"logical_axes names {len(flat_names)} inputs but the "
+                f"program has {len(art.prog.inputs)}")
+        cs = self.compile_constraints(request)
+
+        store = plan_store if plan_store is not None else self.plan_store
+        store_params = None
+        if store is not None:
+            if not hasattr(store, "get"):
+                from repro.ckpt.plan_store import PlanStore
+                store = PlanStore(store)
+            store_params = request.store_params()
+            hit = store.get(self.fingerprint, request.mesh, request.hw,
+                            store_params)
+            if hit is not None:
+                if request.constraints:
+                    hit.check(request.constraints)
+                return hit
+
+        cm = self._cost_model(request.mesh, request.hw)
+        actions = self._actions(request.mesh, request.min_dims)
+        root = ShardingState()
+        if cs is not None:
+            actions = cs.prune(actions)
+            root = cs.root_state()
+        engine = get_backend(request.backend)
+        evaluator = IncrementalEvaluator(cm, constraints=cs)
+        result = engine.search(evaluator, actions, request.search_config,
+                               root=root)
+        elapsed = time.perf_counter() - t0
+
+        eval_stats = evaluator.stats.as_dict()
+        if getattr(result, "members", None) is not None:
+            eval_stats["portfolio"] = {
+                "winner": result.winner,
+                "early_stopped": result.early_stopped,
+                "members": [m.as_dict() for m in result.members],
+            }
+        summary = art.nda.color_summary()
+        plan = ShardingPlan(
+            mesh=request.mesh,
+            in_specs=_state_specs(cm, result.best_state, art.prog.inputs),
+            input_paths=art.prog.input_paths,
+            state=result.best_state,
+            cost=result.best_cost,
+            breakdown=evaluator.evaluate(result.best_state).as_dict(),
+            baseline_breakdown=cm.baseline().as_dict(),
+            constraint_specs=_constraint_specs(cm, result.best_state,
+                                               art.analysis),
+            logical_rules=_logical_rules(art.nda, art.prog,
+                                         result.best_state, flat_names),
+            search_seconds=elapsed,
+            evaluations=result.evaluations,
+            num_colors=len(summary),
+            num_conflicts=len(art.analysis.conflicts),
+            num_compat_sets=len(art.analysis.compat_sets),
+            num_resolution_bits=art.analysis.num_resolution_bits,
+            backend=engine.name,
+            eval_stats=eval_stats,
+            fingerprint=self.fingerprint,
+            out_specs=_state_specs(cm, result.best_state,
+                                   art.prog.outputs),
+            logical_axes=flat_names,
+        )
+        if request.constraints:
+            plan.check(request.constraints)
+        if store is not None:
+            store.put(plan, request.hw, store_params)
+        return plan

@@ -7,7 +7,7 @@ an unchanged mesh is a file read, not a re-search — the portfolio-style
 reuse that makes zoo-wide driving practical (see
 ``python -m repro.launch.zoo``).
 
-Keying:
+Keying (schema v2):
 
 - the **program fingerprint** — a deterministic SHA-256 over the
   extracted tensor program (``repro.core.ir.program_fingerprint``); no
@@ -15,10 +15,17 @@ Keying:
 - the **mesh** (axis names, sizes, DCN axes);
 - the **hardware spec** (all roofline constants, including the memory
   budget — a plan feasible on 16 GiB chips may be infeasible on 8 GiB);
-- the **request parameters** that change the search outcome
-  (``min_dims`` action-space pruning, declared ``logical_axes``) — the
-  search *backend* is deliberately not part of the key, so any backend
-  can reuse any backend's plan.
+- the **canonical request parameters** that change the search outcome:
+  ``min_dims`` action-space pruning, declared ``logical_axes``
+  (canonicalized — list vs tuple spellings and all-``None``
+  declarations collapse to one key), and the user **constraints**
+  (canonical tuple forms) — the search *backend* is deliberately not
+  part of the key, so any backend can reuse any backend's plan.
+
+The schema is versioned and backward-readable: reads try the v2 key
+first and, for constraint-free requests, fall back to the legacy v1
+key (PR 2's ``repr``-based params), so stores written by older code
+stay warm.  Writes always use v2.
 
 Layout: one ``<key>.json`` file per entry under the store directory,
 containing the metadata triple plus the full plan
@@ -35,21 +42,58 @@ import os
 import pathlib
 import tempfile
 
+from repro.core.actions import DEFAULT_MIN_DIMS
+from repro.core.constraints import (canonical_constraints,
+                                    canonical_logical_axes)
 from repro.core.cost_model import HardwareSpec, MeshSpec
 from repro.core.partitioner import ShardingPlan
+
+PLAN_KEY_SCHEMA = 2
+
+
+def canonical_request_params(params: dict | None) -> dict:
+    """Canonicalize request parameters for keying.
+
+    Spellings that describe the same request — ``logical_axes`` as
+    lists vs tuples (or declared but all-``None``), constraints as
+    objects vs canonical tuples, absent vs default ``min_dims`` — all
+    map to one canonical dict, hence one cache key (the PR 2 scheme
+    keyed on raw ``repr`` and split them).
+
+    Args:
+        params: raw params dict (``min_dims``, ``logical_axes``,
+            ``constraints``) or ``None``.
+
+    Returns:
+        ``{"min_dims": int, "logical_axes": tuple | None,
+        "constraints": tuple}``.
+    """
+    p = dict(params or {})
+    min_dims = p.get("min_dims")
+    return {
+        "min_dims": DEFAULT_MIN_DIMS if min_dims is None else int(min_dims),
+        "logical_axes": canonical_logical_axes(p.get("logical_axes")),
+        "constraints": canonical_constraints(p.get("constraints") or ()),
+    }
+
+
+def _jsonify(x):
+    if isinstance(x, (tuple, list)):
+        return [_jsonify(e) for e in x]
+    if isinstance(x, dict):
+        return {k: _jsonify(v) for k, v in x.items()}
+    return x
 
 
 def plan_key(fingerprint: str, mesh: MeshSpec,
              hw: HardwareSpec | None = None,
              params: dict | None = None) -> str:
-    """Deterministic cache key for one partitioning request.
+    """Legacy (schema v1) cache key, kept for backward reads.
 
-    The key covers everything that changes the *search outcome*: the
-    program, the mesh, the hardware constants, and the request
-    parameters (``min_dims`` action-space pruning, declared
-    ``logical_axes``).  The search *backend* is deliberately excluded —
-    reusing a plan found by a different backend is the point of the
-    cache (Automap-style result reuse).
+    PR 2's key: raw ``repr`` of the params values, no constraints, no
+    canonicalization.  New entries are written under
+    :func:`plan_key_v2`; this form is only computed as a read fallback
+    so stores written by older code stay warm.
 
     Args:
         fingerprint: program fingerprint from
@@ -72,6 +116,59 @@ def plan_key(fingerprint: str, mesh: MeshSpec,
                              for k in sorted(params or {})),
     ]
     return hashlib.sha256("\x00".join(parts).encode()).hexdigest()
+
+
+def plan_key_v2(fingerprint: str, mesh: MeshSpec,
+                hw: HardwareSpec | None = None,
+                params: dict | None = None) -> str:
+    """Schema-v2 cache key: canonical request params, constraints included.
+
+    The key covers everything that changes the *search outcome*: the
+    program, the mesh, the hardware constants, and the canonical request
+    parameters (``min_dims``, ``logical_axes``, ``constraints``).  The
+    search *backend* is deliberately excluded — reusing a plan found by
+    a different backend is the point of the cache (Automap-style result
+    reuse).
+
+    Args:
+        fingerprint: program fingerprint from
+            ``repro.core.ir.program_fingerprint``.
+        mesh: the mesh the plan targets.
+        hw: hardware spec (defaults used when ``None``).
+        params: raw request params; canonicalized via
+            :func:`canonical_request_params` before hashing, so
+            equivalent spellings share one key.
+
+    Returns:
+        A 64-char hex SHA-256 key.
+    """
+    hw = hw or HardwareSpec()
+    payload = {
+        "schema": PLAN_KEY_SCHEMA,
+        "prog": fingerprint,
+        "mesh": mesh.as_dict(),
+        "hw": {f.name: getattr(hw, f.name)
+               for f in dataclasses.fields(hw)},
+        "params": _jsonify(canonical_request_params(params)),
+    }
+    blob = json.dumps(payload, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+def _legacy_candidate_params(params: dict | None) -> list[dict]:
+    """v1 params spellings an old writer may have used for this request."""
+    canon = canonical_request_params(params)
+    if canon["constraints"]:
+        return []                   # constraints never existed under v1
+    la = canon["logical_axes"]
+    legacy_la = None if la is None else \
+        [tuple(e) if e is not None else None for e in la]
+    out = [{"min_dims": canon["min_dims"], "logical_axes": legacy_la}]
+    raw = dict(params or {})
+    raw.pop("constraints", None)
+    if raw and raw not in out:
+        out.append(raw)             # the caller's exact v1 spelling
+    return out
 
 
 @dataclasses.dataclass
@@ -132,19 +229,32 @@ class PlanStore:
         Returns:
             The cached :class:`ShardingPlan` with ``cached=True`` and
             ``search_seconds=0``, or ``None`` on a miss (including
-            unreadable/corrupt entries, which count as misses).
+            unreadable/corrupt entries, which count as misses).  The v2
+            key is tried first; constraint-free requests fall back to
+            the legacy v1 key so pre-v2 stores stay readable.
         """
-        path = self._path(plan_key(fingerprint, mesh, hw, params))
-        try:
-            entry = json.loads(path.read_text())
-            plan = ShardingPlan.from_dict(entry["plan"])
-        except Exception:       # noqa: BLE001 — any malformed entry is a miss
-            self.stats.misses += 1
-            return None
-        plan.cached = True
-        plan.search_seconds = 0.0
-        self.stats.hits += 1
-        return plan
+        keys = [plan_key_v2(fingerprint, mesh, hw, params)]
+        keys += [plan_key(fingerprint, mesh, hw, p)
+                 for p in _legacy_candidate_params(params)]
+        seen: set[str] = set()
+        for key in keys:
+            if key in seen:
+                continue
+            seen.add(key)
+            path = self._path(key)
+            if not path.exists():
+                continue
+            try:
+                entry = json.loads(path.read_text())
+                plan = ShardingPlan.from_dict(entry["plan"])
+            except Exception:   # noqa: BLE001 — a malformed entry is a miss
+                continue
+            plan.cached = True
+            plan.search_seconds = 0.0
+            self.stats.hits += 1
+            return plan
+        self.stats.misses += 1
+        return None
 
     def put(self, plan: ShardingPlan,
             hw: HardwareSpec | None = None,
@@ -165,10 +275,12 @@ class PlanStore:
         if not plan.fingerprint:
             return None
         self.directory.mkdir(parents=True, exist_ok=True)
-        path = self._path(plan_key(plan.fingerprint, plan.mesh, hw, params))
+        path = self._path(plan_key_v2(plan.fingerprint, plan.mesh, hw,
+                                      params))
         entry = {
+            "schema": PLAN_KEY_SCHEMA,
             "fingerprint": plan.fingerprint,
-            "params": {k: repr(v) for k, v in (params or {}).items()},
+            "params": _jsonify(canonical_request_params(params)),
             "mesh": plan.mesh.as_dict(),
             "hardware": dataclasses.asdict(hw or HardwareSpec()),
             "plan": plan.as_dict(),

@@ -18,6 +18,11 @@ from repro.core.conflicts import ConflictAnalysis
 from repro.core.cost_model import MeshSpec, ShardingState
 from repro.core.nda import NDAResult
 
+# the paper's action-space pruning default; shared by the API layer
+# (Request / auto_partition) and the plan-store key canonicalization so
+# the cache key's default can never drift from the search's
+DEFAULT_MIN_DIMS = 10
+
 
 @dataclasses.dataclass(frozen=True)
 class Action:
@@ -37,7 +42,7 @@ STOP = Action(color=-1, axis="", bit_choices=())
 
 
 def build_action_space(nda: NDAResult, analysis: ConflictAnalysis,
-                       mesh: MeshSpec, *, min_dims: int = 10,
+                       mesh: MeshSpec, *, min_dims: int = DEFAULT_MIN_DIMS,
                        max_bits_per_action: int = 2) -> list[Action]:
     summary = nda.color_summary()
     actions: list[Action] = []

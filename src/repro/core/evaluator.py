@@ -65,12 +65,20 @@ class IncrementalEvaluator:
     ``max_records`` bounds the LRU store of diff records (each holds the
     per-op rows of one state); the breakdown transposition cache is
     unbounded — it is a few floats per state.
+
+    ``constraints`` (a compiled ``repro.core.constraints.ConstraintSet``)
+    marks violating states infeasible: ``paper_cost`` /
+    ``paper_cost_child`` add the set's penalty per violated pin/forbid,
+    so even a backend that synthesizes states outside the pruned action
+    space can never prefer a constraint-violating plan.  Breakdowns
+    (``evaluate``) stay exact — the penalty is a search-cost concern.
     """
 
     def __init__(self, cost_model: CostModel, *,
-                 max_records: int = 4096) -> None:
+                 max_records: int = 4096, constraints=None) -> None:
         self.cm = cost_model
         self.stats = EvalStats()
+        self.constraints = constraints
         self._records: OrderedDict[ShardingState, _Record] = OrderedDict()
         self._bd: dict[ShardingState, CostBreakdown] = {}
         self._max_records = max_records
@@ -140,9 +148,14 @@ class IncrementalEvaluator:
             state: canonical sharding state to cost.
 
         Returns:
-            Relative runtime plus memory penalty (1.0 == unsharded).
+            Relative runtime plus memory penalty (1.0 == unsharded),
+            plus the constraint-violation penalty when the evaluator
+            carries a constraint set and ``state`` violates it.
         """
-        return self.cm.cost_from_breakdown(self.evaluate(state))
+        cost = self.cm.cost_from_breakdown(self.evaluate(state))
+        if self.constraints is not None:
+            cost += self.constraints.penalty_for(state)
+        return cost
 
     def paper_cost_child(self, parent: ShardingState, action: Action
                          ) -> tuple[ShardingState, float]:
@@ -153,10 +166,14 @@ class IncrementalEvaluator:
             action: the single action to apply.
 
         Returns:
-            ``(child_state, paper_cost)``.
+            ``(child_state, paper_cost)`` — the cost includes the
+            constraint-violation penalty when one applies.
         """
         state, bd = self.child(parent, action)
-        return state, self.cm.cost_from_breakdown(bd)
+        cost = self.cm.cost_from_breakdown(bd)
+        if self.constraints is not None:
+            cost += self.constraints.penalty_for(state)
+        return state, cost
 
     # -- internals -----------------------------------------------------------
 

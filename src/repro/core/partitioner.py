@@ -1,13 +1,13 @@
-"""TOAST front-end: trace a JAX function, run the NDA + conflict analysis,
-search with a pluggable backend (MCTS by default; see
-``repro.core.search``) over the incremental cost evaluator, and emit a
-``ShardingPlan`` of ``PartitionSpec``s.
+"""TOAST front-end: the ``ShardingPlan`` type and the classic
+``auto_partition`` entry point.
 
-Typical use::
+The staged public API lives in ``repro.api`` (``Session`` /
+``Request`` / ``Constraint``); ``auto_partition`` remains as a thin
+one-shot wrapper over it::
 
     plan = auto_partition(train_step, (params, batch),
                           mesh=MeshSpec(("data", "model"), (16, 16)))
-    jitted = jax.jit(train_step, in_shardings=plan.jax_in_shardings(mesh))
+    jitted = plan.apply(train_step)        # in+out shardings installed
 
 Intermediate conflict resolutions (e.g. sequence sharding of attention
 scores) surface in ``plan.constraint_specs`` and — when the caller declares
@@ -19,22 +19,20 @@ from __future__ import annotations
 
 import dataclasses
 import json
-import time
 from collections import Counter, defaultdict
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec
 
-from repro.core.actions import Action, build_action_space
 from repro.core.conflicts import ConflictAnalysis, analyze_conflicts
-from repro.core.cost_model import (CostBreakdown, CostModel, HardwareSpec,
-                                   MeshSpec, ShardingState)
-from repro.core.evaluator import IncrementalEvaluator
-from repro.core.ir import Program, extract_program, program_fingerprint
+from repro.core.constraints import ConstraintError, check_plan, match_paths
+from repro.core.cost_model import (CostModel, HardwareSpec, MeshSpec,
+                                   ShardingState)
+from repro.core.ir import Program, extract_program
 from repro.core.mcts import MCTSConfig
 from repro.core.nda import NDAResult, run_nda
-from repro.core.search import SearchBackend, get_backend
+from repro.core.search import SearchBackend
 
 
 @dataclasses.dataclass
@@ -70,6 +68,13 @@ class ShardingPlan:
             (:func:`repro.core.ir.program_fingerprint`) when known.
         cached: True when the plan was served from a
             ``repro.ckpt.plan_store.PlanStore`` instead of a fresh search.
+        out_specs: one ``PartitionSpec`` per flattened program *output*,
+            projected from the same final state (consumed by
+            :meth:`apply` as ``jax.jit``'s ``out_shardings``).  Empty on
+            plans deserialized from pre-output-sharding JSON.
+        logical_axes: the flattened per-input logical dim names the plan
+            was searched with (``None`` when the request declared none);
+            lets :meth:`check` resolve logical-name constraint targets.
     """
 
     mesh: MeshSpec
@@ -91,6 +96,8 @@ class ShardingPlan:
     eval_stats: dict = dataclasses.field(default_factory=dict)
     fingerprint: str = ""
     cached: bool = False
+    out_specs: list[PartitionSpec] = dataclasses.field(default_factory=list)
+    logical_axes: list[tuple[str, ...] | None] | None = None
 
     def jax_in_shardings(self, mesh: jax.sharding.Mesh, treedef=None):
         """Materialize ``in_specs`` as ``NamedSharding``s on ``mesh``.
@@ -111,20 +118,98 @@ class ShardingPlan:
             return jax.tree_util.tree_unflatten(treedef, specs)
         return specs
 
-    def spec_for(self, path_substr: str) -> PartitionSpec | None:
-        """Return the spec of the first input whose path contains
-        ``path_substr`` (``None`` when no path matches).
+    def jax_out_shardings(self, mesh: jax.sharding.Mesh, treedef=None):
+        """Materialize ``out_specs`` as ``NamedSharding``s on ``mesh``.
 
         Args:
-            path_substr: substring matched against ``input_paths``.
+            mesh: a concrete ``jax.sharding.Mesh`` whose axis names match
+                the plan's ``MeshSpec``.
+            treedef: optional treedef to unflatten the shardings into the
+                function's output structure.
 
         Returns:
-            The matching ``PartitionSpec`` or ``None``.
+            A flat list of ``NamedSharding`` (or the unflattened pytree
+            when ``treedef`` is given), suitable for ``jax.jit``'s
+            ``out_shardings``; ``None`` when the plan carries no output
+            specs (pre-output-sharding JSON).
         """
-        for p, s in zip(self.input_paths, self.in_specs):
-            if path_substr in p:
-                return s
-        return None
+        if not self.out_specs:
+            return None
+        specs = [NamedSharding(mesh, s) for s in self.out_specs]
+        if treedef is not None:
+            return jax.tree_util.tree_unflatten(treedef, specs)
+        return specs
+
+    def spec_for(self, pattern: str) -> PartitionSpec | None:
+        """Return the spec of the input matching ``pattern``.
+
+        Matching tries exact path equality first, then substring
+        containment (``"['x']"``), then ``fnmatch`` globs (``*w1*``).
+        When several inputs match they must all carry the same spec — a
+        multi-match with *differing* specs raises instead of silently
+        returning the first hit (the old behaviour).
+
+        Args:
+            pattern: exact path, glob, or substring matched against
+                ``input_paths``.
+
+        Returns:
+            The matching ``PartitionSpec``, or ``None`` when nothing
+            matches.
+
+        Raises:
+            ValueError: when the pattern matches several inputs whose
+                specs differ (ambiguous).
+        """
+        idxs = match_paths(pattern, self.input_paths)
+        if not idxs:
+            return None
+        specs = {self.in_specs[i] for i in idxs}
+        if len(specs) > 1:
+            hits = ", ".join(f"{self.input_paths[i]}={self.in_specs[i]}"
+                             for i in idxs)
+            raise ValueError(f"spec_for({pattern!r}) is ambiguous: {hits}")
+        return self.in_specs[idxs[0]]
+
+    def check(self, constraints) -> bool:
+        """Assert the plan satisfies user constraints.
+
+        Args:
+            constraints: iterable of ``repro.core.constraints``
+                constraints (``Pin`` / ``Replicate`` / ``Forbid``).
+
+        Returns:
+            True when every constraint is satisfied.
+
+        Raises:
+            ConstraintError: listing every violated constraint, or when
+                a target resolves to no input.
+        """
+        errs = check_plan(self, tuple(constraints))
+        if errs:
+            raise ConstraintError("plan violates constraints: " +
+                                  "; ".join(errs))
+        return True
+
+    def apply(self, fn: Callable, mesh: jax.sharding.Mesh | None = None,
+              **jit_kwargs) -> "AppliedPlan":
+        """Jit ``fn`` with the plan's input *and* output shardings.
+
+        Args:
+            fn: the function the plan was searched for (same signature).
+            mesh: concrete ``jax.sharding.Mesh``; built from the plan's
+                ``MeshSpec`` over the available devices when ``None``.
+            **jit_kwargs: forwarded to ``jax.jit`` (``donate_argnums``,
+                ``static_argnums``, ...).
+
+        Returns:
+            An :class:`AppliedPlan` — call it like the jitted function,
+            or AOT-compile via its ``lower`` method.
+        """
+        if mesh is None:
+            from repro.launch.mesh import compat_make_mesh
+            mesh = compat_make_mesh(self.mesh.sizes, self.mesh.axes)
+        return AppliedPlan(self, fn, mesh, jit_kwargs)
 
     def as_dict(self) -> dict:
         """JSON-serializable dict capturing the full plan (the inverse of
@@ -152,6 +237,11 @@ class ShardingPlan:
             "backend": self.backend,
             "eval_stats": self.eval_stats,
             "fingerprint": self.fingerprint,
+            "out_specs": [list(map(_spec_entry, s)) for s in self.out_specs],
+            "logical_axes": (None if self.logical_axes is None else
+                             [list(t) if t is not None else None
+                              for t in self.logical_axes]),
+            "schema": 2,
         }
 
     def to_json(self) -> str:
@@ -197,6 +287,11 @@ class ShardingPlan:
             backend=d.get("backend", "mcts"),
             eval_stats=dict(d.get("eval_stats", {})),
             fingerprint=d.get("fingerprint", ""),
+            out_specs=[_spec_from_entries(s)
+                       for s in d.get("out_specs", [])],
+            logical_axes=(None if d.get("logical_axes") is None else
+                          [tuple(t) if t is not None else None
+                           for t in d["logical_axes"]]),
         )
 
     @classmethod
@@ -210,6 +305,93 @@ class ShardingPlan:
             The reconstructed ``ShardingPlan``.
         """
         return cls.from_dict(json.loads(s))
+
+
+class AppliedPlan:
+    """The result of :meth:`ShardingPlan.apply`: a sharded jitted function.
+
+    Jitting is deferred to the first call (or ``lower``) because
+    ``jax.jit``'s ``in_shardings``/``out_shardings`` must mirror the
+    argument and output pytree structures, which are only known once
+    arguments arrive.  The jitted function is cached per argument
+    treedef, so steady-state calls pay one dict lookup.
+    """
+
+    def __init__(self, plan: "ShardingPlan", fn: Callable,
+                 mesh: jax.sharding.Mesh, jit_kwargs: dict) -> None:
+        """Bind a plan to a function and a concrete mesh.
+
+        Args:
+            plan: the sharding plan to install.
+            fn: the function the plan was searched for.
+            mesh: concrete mesh matching the plan's ``MeshSpec`` axes.
+            jit_kwargs: extra keyword arguments for ``jax.jit``.
+        """
+        self.plan = plan
+        self.fn = fn
+        self.mesh = mesh
+        self._jit_kwargs = dict(jit_kwargs)
+        self._cache: dict = {}
+
+    def _jitted(self, args: tuple, kwargs: dict):
+        if kwargs:
+            raise ValueError(
+                "plan.apply() functions take positional arguments only "
+                "(jax.jit in_shardings do not cover keyword arguments)")
+        flat, _ = jax.tree_util.tree_flatten((args, {}))
+        if len(flat) != len(self.plan.in_specs):
+            raise ValueError(
+                f"plan has {len(self.plan.in_specs)} input specs but the "
+                f"call provides {len(flat)} argument leaves")
+        args_def = jax.tree_util.tree_structure(args)
+        hit = self._cache.get(args_def)
+        if hit is not None:
+            return hit
+        in_sh = jax.tree_util.tree_unflatten(
+            args_def, [NamedSharding(self.mesh, s)
+                       for s in self.plan.in_specs])
+        out_sh = None
+        if self.plan.out_specs:
+            out_shape = jax.eval_shape(self.fn, *args)
+            out_def = jax.tree_util.tree_structure(out_shape)
+            if out_def.num_leaves != len(self.plan.out_specs):
+                raise ValueError(
+                    f"plan has {len(self.plan.out_specs)} output specs "
+                    f"but fn returns {out_def.num_leaves} leaves")
+            out_sh = jax.tree_util.tree_unflatten(
+                out_def, [NamedSharding(self.mesh, s)
+                          for s in self.plan.out_specs])
+        jitted = jax.jit(self.fn, in_shardings=in_sh, out_shardings=out_sh,
+                         **self._jit_kwargs)
+        self._cache[args_def] = jitted
+        return jitted
+
+    def __call__(self, *args, **kwargs):
+        """Run the sharded jitted function.
+
+        Args:
+            *args: positional arguments (structure must match the traced
+                function's).
+            **kwargs: rejected — ``in_shardings`` cover positional
+                arguments only.
+
+        Returns:
+            The function result, with the plan's output shardings.
+        """
+        return self._jitted(args, kwargs)(*args)
+
+    def lower(self, *args, **kwargs):
+        """AOT-lower the sharded function (``jax.jit(...).lower``).
+
+        Args:
+            *args: positional arguments — ``jax.ShapeDtypeStruct``
+                stand-ins suffice.
+            **kwargs: rejected (positional-only, as in ``__call__``).
+
+        Returns:
+            The ``jax.stages.Lowered`` object (``.compile()`` it).
+        """
+        return self._jitted(args, kwargs).lower(*args)
 
 
 def _spec_entry(e):
@@ -254,11 +436,13 @@ def analyze(fn: Callable, args: tuple, kwargs: dict | None = None
 
 
 def _state_specs(cm: CostModel, state: ShardingState,
-                 prog: Program) -> list[PartitionSpec]:
+                 vids: list[int]) -> list[PartitionSpec]:
+    """Project a search state onto one ``PartitionSpec`` per value id
+    (program inputs or outputs)."""
     color_axes, bits = state.as_dicts()
     _, suppressed = cm._chosen_suppressed(bits)
     specs = []
-    for vid in prog.inputs:
+    for vid in vids:
         site = cm.nda.def_site[vid]
         axes = cm.site_axes(site, color_axes, suppressed)
         specs.append(PartitionSpec(*[
@@ -341,14 +525,17 @@ def auto_partition(fn: Callable, args: tuple, mesh: MeshSpec, *,
                    search_config=None,
                    portfolio=None,
                    plan_store=None,
-                   min_dims: int = 10,
+                   min_dims: int | None = None,
                    logical_axes: list[tuple[str, ...]] | None = None,
+                   constraints=(),
                    artifacts: ToastArtifacts | None = None) -> ShardingPlan:
     """Run the full TOAST pipeline on ``fn(*args, **kwargs)``.
 
-    Traces ``fn`` to a flat tensor program, runs the NDA + conflict
-    analysis, searches for a low-cost sharding with the selected backend,
-    and projects the winning state onto per-input ``PartitionSpec``s.
+    A one-shot convenience wrapper over the staged API: it builds a
+    ``repro.api.Session`` (trace + NDA + conflict analysis) and a
+    ``repro.api.Request`` and returns ``session.partition(request)``.
+    Repeated partitioning of one function (several meshes, constraint
+    sets, backends) is cheaper through an explicit ``Session``.
 
     Args:
         fn: the function to partition (a train/serve step).  Only traced,
@@ -369,12 +556,15 @@ def auto_partition(fn: Callable, args: tuple, mesh: MeshSpec, *,
             ``search_config`` separately.
         plan_store: a ``repro.ckpt.plan_store.PlanStore`` (or a directory
             path for one).  When given, a plan cached under this
-            program's fingerprint × ``mesh`` × ``hw`` is returned without
-            searching, and fresh plans are persisted on the way out.
+            program's fingerprint × ``mesh`` × ``hw`` × request key is
+            returned without searching, and fresh plans are persisted on
+            the way out.
         min_dims: action-space pruning threshold — colors occurring on
             fewer dims are not sharded directly (paper uses 10).
         logical_axes: optional per-input logical dim names (see
             ``flatten_logical_axes``); enables ``plan.logical_rules``.
+        constraints: optional ``repro.core.constraints`` constraints
+            (``Pin`` / ``Replicate`` / ``Forbid``) the plan must satisfy.
         artifacts: pre-computed analysis artifacts to reuse across
             meshes/searches (see :func:`analyze`).
 
@@ -382,75 +572,24 @@ def auto_partition(fn: Callable, args: tuple, mesh: MeshSpec, *,
         A :class:`ShardingPlan`; ``plan.cached`` is True when it came from
         the plan store.
     """
-    t0 = time.perf_counter()
-    art = artifacts or analyze(fn, args, kwargs)
+    from repro.api import Request, Session
+    from repro.core.search import get_backend
     if portfolio is not None and portfolio is not False:
         backend = "portfolio"
         if search_config is None and not isinstance(portfolio, bool):
             search_config = portfolio
-
-    store = plan_store
-    fingerprint = ""
-    store_params = None
-    if store is not None:
-        if not hasattr(store, "get"):
-            from repro.ckpt.plan_store import PlanStore
-            store = PlanStore(store)
-        fingerprint = program_fingerprint(art.prog)
-        # everything that changes the search outcome beyond the program/
-        # mesh/hw triple must be in the key (the backend deliberately
-        # isn't: reusing another backend's plan is the point)
-        store_params = {"min_dims": min_dims, "logical_axes": logical_axes}
-        hit = store.get(fingerprint, mesh, hw, store_params)
-        if hit is not None:
-            return hit
-
-    cm = CostModel(art.prog, art.nda, art.analysis, mesh, hw)
-    key = (mesh, min_dims)
-    actions = art.actions_by_mesh.get(key)
-    if actions is None:
-        actions = build_action_space(art.nda, art.analysis, mesh,
-                                     min_dims=min_dims)
-        art.actions_by_mesh[key] = actions
-    engine = get_backend(backend)
-    cfg = search_config
-    if cfg is None and engine.name == "mcts":
-        cfg = mcts
-    evaluator = IncrementalEvaluator(cm)
-    result = engine.search(evaluator, actions, cfg)
-    elapsed = time.perf_counter() - t0
-
-    eval_stats = evaluator.stats.as_dict()
-    if getattr(result, "members", None) is not None:
-        eval_stats["portfolio"] = {
-            "winner": result.winner,
-            "early_stopped": result.early_stopped,
-            "members": [m.as_dict() for m in result.members],
-        }
-    specs = _state_specs(cm, result.best_state, art.prog)
-    summary = art.nda.color_summary()
-    plan = ShardingPlan(
-        mesh=mesh,
-        in_specs=specs,
-        input_paths=art.prog.input_paths,
-        state=result.best_state,
-        cost=result.best_cost,
-        breakdown=evaluator.evaluate(result.best_state).as_dict(),
-        baseline_breakdown=cm.baseline().as_dict(),
-        constraint_specs=_constraint_specs(cm, result.best_state,
-                                           art.analysis),
-        logical_rules=_logical_rules(art.nda, art.prog, result.best_state,
-                                     logical_axes),
-        search_seconds=elapsed,
-        evaluations=result.evaluations,
-        num_colors=len(summary),
-        num_conflicts=len(art.analysis.conflicts),
-        num_compat_sets=len(art.analysis.compat_sets),
-        num_resolution_bits=art.analysis.num_resolution_bits,
-        backend=engine.name,
-        eval_stats=eval_stats,
-        fingerprint=fingerprint,
-    )
-    if store is not None:
-        store.put(plan, hw, store_params)
-    return plan
+    if search_config is None and mcts is not None:
+        engine = get_backend(backend)
+        if engine.name == "mcts":
+            search_config = mcts
+        backend = engine        # resolved once; reused by the session
+    if min_dims is None:
+        from repro.core.actions import DEFAULT_MIN_DIMS
+        min_dims = DEFAULT_MIN_DIMS
+    request = Request(mesh=mesh, hw=hw, backend=backend,
+                      search_config=search_config, min_dims=min_dims,
+                      logical_axes=logical_axes,
+                      constraints=tuple(constraints))
+    session = Session(fn, args, kwargs=kwargs, artifacts=artifacts,
+                      plan_store=plan_store)
+    return session.partition(request)

@@ -199,7 +199,11 @@ class PortfolioBackend(SearchBackend):
         def run_member(member: PortfolioMember
                        ) -> tuple[SearchResult, float]:
             engine = get_backend(member.backend)
-            ev = IncrementalEvaluator(cm)
+            # each member gets its own evaluator (mutable caches), but
+            # inherits the driving evaluator's constraint set so user
+            # pins/forbids stay infeasible inside every member too
+            ev = IncrementalEvaluator(
+                cm, constraints=getattr(evaluator, "constraints", None))
             t0 = time.perf_counter()
             res = engine.search(ev, actions, _member_config(member, engine),
                                 root)

@@ -44,32 +44,47 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
              plan: str = "manual", toast_plan=None,
              backend: str = "mcts",
              overrides: dict | None = None,
-             extra_rules: dict | None = None) -> dict:
+             extra_rules: dict | None = None,
+             smoke: bool = False) -> dict:
     """Lower + compile one cell; returns the recorded analysis.
 
     ``overrides`` are dataclasses.replace'd into the ModelConfig (perf
     hillclimbing knobs); ``extra_rules`` extend/override the logical
-    sharding rules."""
+    sharding rules.  ``smoke`` runs the reduced config on a tiny
+    (64-seq, batch-8) cell over a 2x4 mesh — the CI fast path that still
+    exercises trace → plan → lower → compile end to end."""
     import dataclasses as _dc
     cfg = get_config(arch)
+    if smoke:
+        cfg = cfg.reduced()
     if overrides:
         cfg = _dc.replace(cfg, **overrides)
-    shape = SHAPES[shape_name]
-    mesh = make_production_mesh(multi_pod=multi_pod)
+    from repro.configs.base import ShapeConfig
+    shape = ShapeConfig("mini", 64, 8, "train") if smoke \
+        else SHAPES[shape_name]
+    if smoke:
+        from repro.launch.mesh import compat_make_mesh
+        mesh = compat_make_mesh((2, 4), ("data", "model"))
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
     axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
 
     fn, args, names = step_and_inputs(cfg, shape)
     plan_meta = {}
     if plan == "toast":
-        # run the TOAST pipeline on this cell's step and use its plan
+        # run the staged TOAST pipeline on this cell's step
+        from repro.api import Request, Session
+        from repro.core.cost_model import MeshSpec
         from repro.core.mcts import MCTSConfig
-        from repro.core.partitioner import (auto_partition,
-                                            flatten_logical_axes)
-        mesh_spec = production_mesh_spec(multi_pod=multi_pod)
-        plan_obj = toast_plan or auto_partition(
-            fn, args, mesh_spec, logical_axes=flatten_logical_axes(names),
-            backend=backend,
-            mcts=MCTSConfig(rounds=10, trajectories_per_round=48))
+        mesh_spec = MeshSpec(("data", "model"), (2, 4)) if smoke \
+            else production_mesh_spec(multi_pod=multi_pod)
+        search_config = None
+        if backend == "mcts":
+            search_config = MCTSConfig(rounds=10,
+                                       trajectories_per_round=48)
+        plan_obj = toast_plan or Session(fn, args).partition(Request(
+            mesh=mesh_spec, backend=backend, search_config=search_config,
+            logical_axes=names))
         rules = dict(plan_obj.logical_rules)
         flat_specs = [jax.sharding.NamedSharding(mesh, s)
                       for s in plan_obj.in_specs]
@@ -126,8 +141,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
     bytes_acc = float(hs.bytes_rw)
     coll_total = float(sum(coll.values()))
     record = {
-        "arch": arch, "shape": shape_name,
-        "mesh": "2x16x16" if multi_pod else "16x16",
+        "arch": arch, "shape": "mini" if smoke else shape_name,
+        "mesh": "2x4" if smoke else ("2x16x16" if multi_pod else "16x16"),
         "plan": plan,
         "num_devices": n_dev,
         "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
@@ -182,6 +197,9 @@ def main() -> None:
                     help="search backend for --plan toast "
                          "(mcts | beam | greedy)")
     ap.add_argument("--all", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config on a 64-seq/batch-8 cell over a "
+                         "2x4 mesh — the CI fast path")
     ap.add_argument("--out", default="results/dryrun")
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--override", action="append", default=[],
@@ -199,6 +217,9 @@ def main() -> None:
         work = [(args.arch, args.shape)]
     meshes = {"single": [False], "multi": [True],
               "both": [False, True]}[args.mesh]
+    if args.smoke:
+        work = [(args.arch or "qwen2_05b", "mini")]
+        meshes = [False]
 
     overrides = {}
     for ov in args.override:
@@ -232,7 +253,8 @@ def main() -> None:
                 rec = run_cell(arch, shape_name, multi_pod=multi,
                                plan=args.plan, backend=args.backend,
                                overrides=overrides or None,
-                               extra_rules=extra_rules or None)
+                               extra_rules=extra_rules or None,
+                               smoke=args.smoke)
                 path.write_text(json.dumps(rec, indent=2))
                 print(f"[ ok ] {tag}: peak/dev="
                       f"{rec['peak_bytes_per_device']/2**30:.2f}GiB "

@@ -5,8 +5,13 @@ configs on CPU): a batch of prompts is prefilled, then decoded token by
 token from the KV/recurrent cache, with TOAST or manual sharding rules
 applied the same way as training.
 
+``--plan toast`` derives the decode-step sharding through the staged
+``Session``/``Request`` API with a ``Replicate`` constraint on the
+decode cache (the classic serving layout: weights sharded, KV cache
+replicated per data-parallel replica group).
+
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2_05b \
-        --reduced --batch 4 --prompt-len 16 --gen 16
+        --reduced --batch 4 --prompt-len 16 --gen 16 --plan toast
 """
 
 from __future__ import annotations
@@ -24,6 +29,44 @@ from repro.models.sharding import MANUAL_RULES, logical_rules
 from repro.train.steps import make_decode_step
 
 
+def toast_decode_rules(cfg, batch: int, max_seq: int):
+    """Search a decode-step sharding with the cache pinned replicated.
+
+    Args:
+        cfg: model config (reduced or full).
+        batch: decode batch size.
+        max_seq: cache depth (prompt + generated tokens).
+
+    Returns:
+        ``(rules, mesh)`` — ``{logical dim name -> mesh axes}`` rules for
+        the ``with_sharding_constraint`` hooks plus the concrete
+        ``jax.sharding.Mesh`` they apply on (``({}, None)`` on one
+        device).
+    """
+    from repro.api import Replicate, Request, Session
+    from repro.configs.base import ShapeConfig
+    from repro.core.cost_model import MeshSpec
+    from repro.launch.mesh import compat_make_mesh
+    from repro.launch.specs import step_and_inputs
+    n_dev = len(jax.devices())
+    if n_dev < 2:
+        return {}, None
+    sizes = (max(1, n_dev // 2), min(2, n_dev))
+    mesh_spec = MeshSpec(("data", "model"), sizes)
+    fn, fargs, names = step_and_inputs(
+        cfg, ShapeConfig("serve", max_seq, batch, "decode"))
+    sess = Session(fn, fargs)
+    has_kv = "attn" in cfg.pattern and not cfg.is_encoder_decoder
+    plan = sess.partition(Request(
+        mesh=mesh_spec, backend="greedy", min_dims=4,
+        logical_axes=names,
+        constraints=(Replicate("['k']"), Replicate("['v']"))
+        if has_kv else ()))
+    print(f"[toast] cost={plan.cost:.4f} rules={plan.logical_rules} "
+          f"search={plan.search_seconds:.1f}s")
+    return dict(plan.logical_rules), compat_make_mesh(sizes, mesh_spec.axes)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2_05b")
@@ -33,6 +76,8 @@ def main() -> None:
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--greedy", action="store_true")
+    ap.add_argument("--plan", choices=["manual", "toast"],
+                    default="manual")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -52,7 +97,14 @@ def main() -> None:
     dec = jax.jit(make_decode_step(cfg))
     cache = T.init_cache(cfg, B, max_seq)
 
-    with logical_rules(None):
+    rules, mesh = (toast_decode_rules(cfg, B, max_seq)
+                   if args.plan == "toast" else ({}, None))
+    from contextlib import nullcontext
+    from repro.launch.mesh import mesh_context
+    # the with_sharding_constraint hooks need an ambient mesh, else the
+    # searched rules silently no-op
+    with mesh_context(mesh) if mesh is not None else nullcontext(), \
+            logical_rules(rules or None):
         # prefill via the decode path (token-by-token here; the production
         # prefill lowers the full-sequence forward — see launch/dryrun.py)
         t0 = time.perf_counter()

@@ -25,11 +25,11 @@ import time
 import jax
 import numpy as np
 
+from repro.api import Request, Session
 from repro.configs import get_config
 from repro.configs.base import ShapeConfig
 from repro.core.cost_model import MeshSpec
 from repro.core.mcts import MCTSConfig
-from repro.core.partitioner import auto_partition
 from repro.ckpt.checkpoint import CheckpointManager
 from repro.data.pipeline import DataConfig, Pipeline
 from repro.launch.specs import (specs_from_rules, state_logical_axes,
@@ -53,13 +53,13 @@ def build_mesh(spec: MeshSpec):
 
 def toast_rules(cfg, shape, mesh_spec: MeshSpec, budget_rounds=6,
                 backend: str = "mcts"):
-    from repro.core.partitioner import flatten_logical_axes
     fn, args, names = step_and_inputs(cfg, shape)
-    flat_names = flatten_logical_axes(names)
-    plan = auto_partition(fn, args, mesh_spec, min_dims=4,
-                          logical_axes=flat_names, backend=backend,
-                          mcts=MCTSConfig(rounds=budget_rounds))
-    return plan
+    sess = Session(fn, args)
+    cfg_search = MCTSConfig(rounds=budget_rounds) \
+        if backend == "mcts" else None
+    return sess.partition(Request(mesh=mesh_spec, backend=backend,
+                                  search_config=cfg_search, min_dims=4,
+                                  logical_axes=names))
 
 
 def run_once(args, attempt: int) -> bool:

@@ -33,12 +33,11 @@ import pathlib
 import time
 import traceback
 
+from repro.api import Request, Session
 from repro.ckpt.plan_store import PlanStore
 from repro.configs import ARCH_IDS, get_config
 from repro.configs.base import ShapeConfig
 from repro.core.cost_model import HardwareSpec, MeshSpec
-from repro.core.partitioner import (analyze, auto_partition,
-                                    flatten_logical_axes)
 from repro.core.portfolio import PortfolioConfig, PortfolioMember
 from repro.core.search import BeamConfig
 from repro.launch.specs import step_and_inputs
@@ -143,16 +142,14 @@ def run_model(arch: str, mesh: MeshSpec, *,
     row = {"model": arch, "family": cfg.family,
            "params_m": round(cfg.num_params() / 1e6, 2),
            "status": "ok", "mesh": "x".join(map(str, mesh.sizes))}
-    t0 = time.perf_counter()
     try:
         fn, args, names = step_and_inputs(cfg, shape)
-        art = analyze(fn, args)
-        t_analysis = time.perf_counter() - t0
-        plan = auto_partition(
-            fn, args, mesh, hw=hw, backend=backend,
-            search_config=search_config,
-            logical_axes=flatten_logical_axes(names),
-            plan_store=plan_store, min_dims=min_dims, artifacts=art)
+        sess = Session(fn, args, plan_store=plan_store)
+        t_analysis = sess.analysis_seconds
+        plan = sess.partition(Request(
+            mesh=mesh, hw=hw, backend=backend,
+            search_config=search_config, min_dims=min_dims,
+            logical_axes=names))
     except Exception as e:                      # noqa: BLE001
         row.update(status="error", error=repr(e),
                    traceback=traceback.format_exc(limit=5))
@@ -160,7 +157,7 @@ def run_model(arch: str, mesh: MeshSpec, *,
     base, bd = plan.baseline_breakdown, plan.breakdown
     pf = plan.eval_stats.get("portfolio", {})
     row.update(
-        ops=len(art.prog.ops),
+        ops=len(sess.artifacts.prog.ops),
         colors=plan.num_colors,
         conflicts=plan.num_conflicts,
         compat_sets=plan.num_compat_sets,

@@ -1,0 +1,386 @@
+"""Session/Request/Constraint API tests (PR 3).
+
+Covers: staged Session reuse, full back-compat of every documented
+``auto_partition`` signature against the equivalent Session/Request
+call, constraint enforcement (Pin/Replicate/Forbid) through all four
+backends, constraint-aware plan-store round-trips, ``spec_for``
+matching, and ``plan.apply`` jit-compiling with matching in/out
+shardings (subprocess, 8 fake devices).
+"""
+
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.api import (ConstraintError, Forbid, Pin, Replicate, Request,
+                       Session)
+from repro.ckpt.plan_store import PlanStore
+from repro.core.cost_model import HardwareSpec, MeshSpec, ShardingState
+from repro.core.evaluator import IncrementalEvaluator
+from repro.core.mcts import MCTSConfig
+from repro.core.partitioner import analyze, auto_partition
+from repro.core.portfolio import PortfolioConfig, PortfolioMember
+from repro.core.search import BeamConfig
+
+
+def sh(*s):
+    return jax.ShapeDtypeStruct(s, jnp.float32)
+
+
+def mlp(d):
+    return jax.nn.relu(d["x"] @ d["w1"]) @ d["w2"]
+
+
+MLP_ARGS = ({"x": sh(1024, 512), "w1": sh(512, 2048),
+             "w2": sh(2048, 512)},)
+MLP_NAMES = ({"x": ("batch", "embed"), "w1": ("embed", "hidden"),
+              "w2": ("hidden", "embed")},)
+MESH = MeshSpec(("data", "model"), (4, 4))
+FAST = MCTSConfig(rounds=3, trajectories_per_round=12)
+
+
+@pytest.fixture(scope="module")
+def sess():
+    return Session(mlp, MLP_ARGS)
+
+
+def fast_request(**kw):
+    kw.setdefault("mesh", MESH)
+    kw.setdefault("min_dims", 1)
+    if kw.get("backend", "mcts") == "mcts":
+        kw.setdefault("search_config", FAST)
+    return Request(**kw)
+
+
+# --- Session staging --------------------------------------------------------
+
+
+class TestSession:
+    def test_analysis_runs_once(self, sess):
+        art = sess.artifacts
+        sess.partition(fast_request())
+        sess.partition(fast_request(mesh=MeshSpec(("data", "model"),
+                                                  (8, 2))))
+        assert sess.artifacts is art          # no re-analysis
+
+    def test_fingerprint_stamped_without_store(self, sess):
+        plan = sess.partition(fast_request())
+        assert len(plan.fingerprint) == 64
+
+    def test_out_specs_projected(self, sess):
+        plan = sess.partition(fast_request())
+        assert len(plan.out_specs) == 1       # mlp returns one array
+        # the output shares the batch color with x: same first entry
+        assert plan.out_specs[0][0] == plan.spec_for("['x']")[0]
+
+    def test_cost_model_cached_per_mesh(self, sess):
+        sess.partition(fast_request())
+        n = len(sess._cost_models)
+        sess.partition(fast_request(backend="greedy"))
+        assert len(sess._cost_models) == n    # same mesh/hw -> same model
+
+    def test_logical_axes_length_mismatch_raises(self, sess):
+        with pytest.raises(ValueError, match="logical_axes"):
+            sess.partition(fast_request(
+                logical_axes=[("batch", "embed")]))
+
+
+# --- back-compat: auto_partition == Session/Request -------------------------
+
+
+def assert_same_plan(a, b):
+    assert a.state == b.state
+    assert a.in_specs == b.in_specs
+    assert a.out_specs == b.out_specs
+    assert a.cost == b.cost
+    assert a.backend == b.backend
+
+
+class TestBackCompat:
+    """Every documented ``auto_partition`` signature from PR 1-2 must
+    produce a plan identical to the equivalent Session/Request call."""
+
+    @pytest.mark.parametrize("backend", ["mcts", "beam", "greedy"])
+    def test_backend_strings(self, sess, backend):
+        cfg = FAST if backend == "mcts" else None
+        old = auto_partition(mlp, MLP_ARGS, MESH, min_dims=1,
+                             artifacts=sess.artifacts, backend=backend,
+                             search_config=cfg)
+        new = sess.partition(Request(mesh=MESH, min_dims=1,
+                                     backend=backend, search_config=cfg))
+        assert_same_plan(old, new)
+
+    def test_mcts_alias(self, sess):
+        old = auto_partition(mlp, MLP_ARGS, MESH, min_dims=1,
+                             artifacts=sess.artifacts, mcts=FAST)
+        new = sess.partition(Request(mesh=MESH, min_dims=1,
+                                     search_config=FAST))
+        assert_same_plan(old, new)
+
+    def test_portfolio_config(self, sess):
+        cfg = PortfolioConfig(
+            members=(PortfolioMember("greedy"),
+                     PortfolioMember("beam", config=BeamConfig(width=4))),
+            max_workers=1)                    # sequential => deterministic
+        old = auto_partition(mlp, MLP_ARGS, MESH, min_dims=1,
+                             artifacts=sess.artifacts, portfolio=cfg)
+        new = sess.partition(Request(mesh=MESH, min_dims=1,
+                                     backend="portfolio",
+                                     search_config=cfg))
+        assert_same_plan(old, new)
+        assert old.eval_stats["portfolio"]["winner"] == \
+            new.eval_stats["portfolio"]["winner"]
+
+    def test_portfolio_true(self, sess):
+        plan = auto_partition(mlp, MLP_ARGS, MESH, min_dims=1,
+                              artifacts=sess.artifacts, portfolio=True)
+        assert plan.backend == "portfolio"
+
+    def test_plan_store_path_interop(self, sess, tmp_path):
+        """auto_partition(plan_store=path) and Session share one cache
+        entry: whichever runs second gets a hit."""
+        old = auto_partition(mlp, MLP_ARGS, MESH, min_dims=1,
+                             artifacts=sess.artifacts, mcts=FAST,
+                             plan_store=str(tmp_path))
+        assert not old.cached
+        new = sess.partition(Request(mesh=MESH, min_dims=1,
+                                     search_config=FAST),
+                             plan_store=str(tmp_path))
+        assert new.cached
+        assert new.state == old.state
+
+    def test_logical_axes_passthrough(self, sess):
+        la = [("batch", "embed"), ("embed", "hidden"), ("hidden", "embed")]
+        # auto_partition takes program-input (flattened, sorted) order;
+        # dict keys flatten alphabetically: w1, w2, x
+        flat = [("embed", "hidden"), ("hidden", "embed"),
+                ("batch", "embed")]
+        old = auto_partition(mlp, MLP_ARGS, MESH, min_dims=1,
+                             artifacts=sess.artifacts, mcts=FAST,
+                             logical_axes=flat)
+        new = sess.partition(Request(mesh=MESH, min_dims=1,
+                                     search_config=FAST,
+                                     logical_axes=MLP_NAMES))
+        assert_same_plan(old, new)
+        assert old.logical_rules == new.logical_rules
+        del la
+
+
+# --- constraints ------------------------------------------------------------
+
+
+CONS = (Pin("['x']", P("data", None)), Replicate("['w1']"))
+
+
+class TestConstraints:
+    @pytest.mark.parametrize("backend", ["mcts", "beam", "greedy",
+                                         "portfolio"])
+    def test_all_backends_satisfy(self, sess, backend):
+        cfg = {"mcts": FAST,
+               "portfolio": PortfolioConfig(
+                   members=(PortfolioMember("greedy"),
+                            PortfolioMember("mcts", config=FAST)),
+                   max_workers=1)}.get(backend)
+        plan = sess.partition(Request(mesh=MESH, min_dims=1,
+                                      backend=backend, search_config=cfg,
+                                      constraints=CONS))
+        assert plan.check(CONS)
+        assert plan.spec_for("['x']") == P("data", None)
+        assert plan.spec_for("['w1']") == P(None, None)
+
+    def test_pin_seeds_root_state(self, sess):
+        plan = sess.partition(fast_request(
+            constraints=(Pin("['x']", P("data", None)),)))
+        ca = dict(plan.state.color_axes)
+        assert ("data",) in [tuple(v) for v in ca.values()]
+
+    def test_logical_pin(self, sess):
+        plan = sess.partition(fast_request(
+            logical_axes=MLP_NAMES, constraints=(Pin("batch", "data"),)))
+        assert plan.spec_for("['x']")[0] == "data"
+        assert plan.logical_rules.get("batch") == ("data",)
+        assert plan.check((Pin("batch", "data"),))
+
+    def test_forbid(self, sess):
+        c = (Forbid("['x']", "model"),)
+        plan = sess.partition(fast_request(constraints=c))
+        assert plan.check(c)
+        for entry in plan.spec_for("['x']"):
+            entries = (entry,) if isinstance(entry, str) else \
+                (entry or ())
+            assert "model" not in entries
+
+    def test_replicate_propagates_to_color(self, sess):
+        """Replicating w1 pins its colors; the check is structural
+        (state-level), not just a projection artifact."""
+        plan = sess.partition(fast_request(
+            constraints=(Replicate("['w1']"),)))
+        cs = sess.compile_constraints(
+            Request(mesh=MESH, constraints=(Replicate("['w1']"),)))
+        assert cs.violations(plan.state) == []
+
+    def test_conflicting_pins_raise(self, sess):
+        with pytest.raises(ConstraintError, match="conflicting"):
+            sess.partition(fast_request(constraints=(
+                Pin("['x']", P("data", None)),
+                Pin("['x']", P("model", None)))))
+
+    def test_unknown_axis_raises(self, sess):
+        with pytest.raises(ConstraintError, match="unknown mesh axis"):
+            sess.partition(fast_request(constraints=(
+                Pin("['x']", P("nope", None)),)))
+
+    def test_non_dividing_pin_raises(self, sess):
+        mesh = MeshSpec(("odd",), (7,))
+        with pytest.raises(ConstraintError, match="not divisible"):
+            sess.partition(Request(mesh=mesh, min_dims=1,
+                                   search_config=FAST,
+                                   constraints=(Pin("['x']",
+                                                    P("odd", None)),)))
+
+    def test_unknown_target_raises(self, sess):
+        with pytest.raises(ConstraintError, match="matches no input"):
+            sess.partition(fast_request(constraints=(
+                Replicate("no_such_input"),)))
+
+    def test_check_rejects_violating_plan(self, sess):
+        plan = sess.partition(fast_request())
+        # the unconstrained optimum shards x; replication must fail
+        with pytest.raises(ConstraintError, match="Replicate"):
+            plan.check((Replicate("['x']"),))
+
+    def test_evaluator_marks_violations_infeasible(self, sess):
+        req = Request(mesh=MESH, constraints=(Replicate("['x']"),))
+        cs = sess.compile_constraints(req)
+        art = sess.artifacts
+        cm = sess._cost_model(MESH, HardwareSpec())
+        ev = IncrementalEvaluator(cm, constraints=cs)
+        # a state sharding x's batch color violates the replication
+        batch_color = art.nda.colors_of_value(art.prog.inputs[-1])[0]
+        bad = ShardingState().with_action(batch_color, "data", ())
+        assert ev.paper_cost(bad) >= cs.penalty
+        assert ev.paper_cost(cs.root_state()) < cs.penalty
+
+    def test_store_round_trip_under_constraint_key(self, sess, tmp_path):
+        store = PlanStore(tmp_path)
+        req = fast_request(constraints=CONS)
+        p1 = sess.partition(req, plan_store=store)
+        assert not p1.cached
+        p2 = sess.partition(req, plan_store=store)
+        assert p2.cached and p2.state == p1.state
+        assert p2.check(CONS)
+        # a different constraint set is a different request
+        p3 = sess.partition(fast_request(
+            constraints=(Replicate("['w1']"),)), plan_store=store)
+        assert not p3.cached
+        assert len(store) == 2
+
+    def test_constrained_cost_not_better_than_free(self, sess):
+        free = sess.partition(fast_request(backend="beam"))
+        tied = sess.partition(fast_request(backend="beam",
+                                           constraints=CONS))
+        assert tied.cost >= free.cost - 1e-12
+
+
+# --- spec_for ---------------------------------------------------------------
+
+
+class TestSpecFor:
+    @pytest.fixture(scope="class")
+    def plan(self):
+        return Session(mlp, MLP_ARGS).partition(fast_request())
+
+    def test_exact(self, plan):
+        assert plan.spec_for("[0][0]['x']") == plan.in_specs[
+            plan.input_paths.index("[0][0]['x']")]
+
+    def test_glob(self, plan):
+        assert plan.spec_for("*w1*") is not None
+
+    def test_substring(self, plan):
+        assert plan.spec_for("['w2']") is not None
+
+    def test_no_match_is_none(self, plan):
+        assert plan.spec_for("nothing_here") is None
+
+    def test_ambiguous_raises(self, plan):
+        if len({s for s in plan.in_specs}) > 1:
+            with pytest.raises(ValueError, match="ambiguous"):
+                plan.spec_for("[0][0]")
+
+    def test_identical_specs_not_ambiguous(self, plan):
+        import dataclasses
+        p = dataclasses.replace(plan, in_specs=[P("data"), P("data")],
+                                input_paths=["a1", "a2"])
+        assert p.spec_for("a") == P("data")
+
+
+# --- plan.apply (subprocess: forces 8 host devices) -------------------------
+
+
+APPLY_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.api import Pin, Request, Session
+from repro.core.cost_model import MeshSpec
+from repro.core.mcts import MCTSConfig
+from repro.core.partitioner import ShardingPlan
+
+sh = lambda *s: jax.ShapeDtypeStruct(s, jnp.float32)
+def mlp(x, w1, w2):
+    return jax.nn.relu(x @ w1) @ w2
+ARGS = (sh(1024, 512), sh(512, 2048), sh(2048, 512))
+sess = Session(mlp, ARGS)
+plan = sess.partition(Request(
+    mesh=MeshSpec(("data", "model"), (2, 4)), min_dims=1,
+    search_config=MCTSConfig(rounds=4),
+    constraints=(Pin("[0][0]", P("data", None)),)))
+step = plan.apply(mlp)
+step.lower(*ARGS).compile()                      # AOT path
+x = jnp.ones((1024, 512)); w1 = jnp.ones((512, 2048))
+w2 = jnp.ones((2048, 512))
+y = step(x, w1, w2)                              # eager path
+assert x.shape == (1024, 512)
+assert y.sharding.spec == plan.out_specs[0], (y.sharding.spec,
+                                              plan.out_specs[0])
+# a plan loaded from JSON applies identically (store/CI handoff)
+step2 = ShardingPlan.from_json(plan.to_json()).apply(mlp)
+y2 = step2(x, w1, w2)
+assert y2.sharding.spec == plan.out_specs[0]
+print("APPLY_OK", plan.in_specs[0], "->", y.sharding.spec)
+"""
+
+
+def test_apply_compiles_with_in_out_shardings():
+    """plan.apply(fn) jit-compiles with the plan's in and out shardings
+    (subprocess because the XLA device count locks at first jax init)."""
+    import os
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    res = subprocess.run([sys.executable, "-c", APPLY_SCRIPT],
+                         capture_output=True, text=True, timeout=600,
+                         env=env)
+    assert "APPLY_OK" in res.stdout, res.stderr[-2000:]
+
+
+def test_apply_rejects_wrong_arity(sess):
+    plan = sess.partition(fast_request())
+    step = plan.apply.__get__(plan)  # bound; mesh build needs devices
+    del step
+    applied = plan.apply(mlp, mesh="unused-sentinel")
+    with pytest.raises(ValueError, match="argument leaves"):
+        applied._jitted((sh(4, 4),), {})
+    with pytest.raises(ValueError, match="positional"):
+        applied._jitted(MLP_ARGS, {"extra": 1})
+
+
+def test_analyze_artifacts_adopted():
+    art = analyze(mlp, MLP_ARGS)
+    s = Session(mlp, MLP_ARGS, artifacts=art)
+    assert s.artifacts is art

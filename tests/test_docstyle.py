@@ -16,6 +16,8 @@ import pytest
 REPO = pathlib.Path(__file__).resolve().parent.parent
 
 DOC_GATED_FILES = [
+    "src/repro/api.py",
+    "src/repro/core/constraints.py",
     "src/repro/core/partitioner.py",
     "src/repro/core/search.py",
     "src/repro/core/evaluator.py",

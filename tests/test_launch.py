@@ -118,10 +118,15 @@ print("MINI_DRYRUN_OK", int(s.flops), int(sum(s.coll_bytes.values())))
 
 def test_mini_dryrun_subprocess():
     """End-to-end dry-run machinery on 8 fake devices (subprocess because
-    the XLA device count locks at first jax init)."""
+    the XLA device count locks at first jax init).  The subprocess
+    inherits the environment: a stripped env makes jax's backend init
+    stall for minutes on platform probing."""
+    import os
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
     res = subprocess.run([sys.executable, "-c", MINI_DRYRUN],
                          capture_output=True, text=True, timeout=600,
-                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+                         env=env)
     assert "MINI_DRYRUN_OK" in res.stdout, res.stderr[-2000:]
 
 

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.ckpt.plan_store import PlanStore, plan_key
+from repro.ckpt.plan_store import PlanStore, plan_key, plan_key_v2
 from repro.core.cost_model import HardwareSpec, MeshSpec
 from repro.core.ir import extract_program, program_fingerprint
 from repro.core.mcts import MCTSConfig
@@ -220,7 +220,7 @@ class TestPlanCache:
         p1 = auto_partition(mlp, MLP_ARGS, MESH, min_dims=1,
                             artifacts=mlp_art, mcts=FAST, plan_store=store)
         params = {"min_dims": 1, "logical_axes": None}
-        key = plan_key(p1.fingerprint, MESH, HardwareSpec(), params)
+        key = plan_key_v2(p1.fingerprint, MESH, HardwareSpec(), params)
         (tmp_path / f"{key}.json").write_text("{not json")
         assert store.get(p1.fingerprint, MESH, params=params) is None
         # parseable JSON with a malformed plan is also a miss, not a crash
@@ -236,3 +236,101 @@ class TestPlanCache:
         assert k != plan_key("a" * 64, MESH, None, {"min_dims": 2})
         assert plan_key("a" * 64, MESH, None, {}) == \
             plan_key("a" * 64, MESH, None)
+
+
+# --- v2 key schema ----------------------------------------------------------
+
+
+class TestKeySchemaV2:
+    def test_differs_by_all_components(self):
+        k = plan_key_v2("a" * 64, MESH)
+        assert k != plan_key_v2("b" * 64, MESH)
+        assert k != plan_key_v2("a" * 64,
+                                MeshSpec(("data", "model"), (2, 8)))
+        assert k != plan_key_v2("a" * 64, MESH,
+                                HardwareSpec(hbm_per_chip=1.0))
+        assert k != plan_key_v2("a" * 64, MESH, None, {"min_dims": 2})
+        assert k != plan_key("a" * 64, MESH)     # schemas never collide
+
+    def test_logical_axes_spelling_normalized(self):
+        """Regression: lists, tuples, and nested mixes of the same
+        declaration must hash to one key (v1 keyed on raw repr)."""
+        as_list = {"logical_axes": [("batch", "embed"), None]}
+        as_tuple = {"logical_axes": (("batch", "embed"), None)}
+        as_inner_list = {"logical_axes": [["batch", "embed"], None]}
+        k = plan_key_v2("a" * 64, MESH, None, as_list)
+        assert k == plan_key_v2("a" * 64, MESH, None, as_tuple)
+        assert k == plan_key_v2("a" * 64, MESH, None, as_inner_list)
+        # v1 split them
+        assert plan_key("a" * 64, MESH, None, as_list) != \
+            plan_key("a" * 64, MESH, None, as_tuple)
+
+    def test_all_none_logical_axes_collapse(self):
+        """Declaring names for no input is the same request as declaring
+        nothing."""
+        assert plan_key_v2("a" * 64, MESH, None,
+                           {"logical_axes": [None, None]}) == \
+            plan_key_v2("a" * 64, MESH, None, {"logical_axes": None})
+
+    def test_constraints_in_key(self):
+        from repro.core.constraints import Pin, Replicate
+        base = plan_key_v2("a" * 64, MESH, None, {})
+        pinned = plan_key_v2("a" * 64, MESH, None,
+                             {"constraints": (Pin("['x']", ("data",)),)})
+        assert base != pinned
+        assert pinned != plan_key_v2(
+            "a" * 64, MESH, None,
+            {"constraints": (Replicate("['x']"),)})
+        # a constraint and its canonical tuple form are the same request
+        assert pinned == plan_key_v2(
+            "a" * 64, MESH, None,
+            {"constraints": [["pin", "['x']", [["data"]]]]})
+        # a bare axis string and its 1-tuple are the same pin
+        assert Pin("batch", "data").canonical() == \
+            Pin("batch", ("data",)).canonical()
+
+    def test_spelling_normalized_through_store(self, mlp_plan, tmp_path):
+        """End-to-end: put under the list spelling, get under the tuple
+        spelling — one entry, one hit."""
+        store = PlanStore(tmp_path)
+        plan = ShardingPlan.from_json(mlp_plan.to_json())
+        plan.fingerprint = "f" * 64
+        la_list = [("batch", "embed"), ("embed", "hidden"),
+                   ("hidden", "embed")]
+        store.put(plan, params={"min_dims": 1, "logical_axes": la_list})
+        got = store.get("f" * 64, plan.mesh,
+                        params={"min_dims": 1,
+                                "logical_axes": tuple(map(tuple, la_list))})
+        assert got is not None and got.cached
+        assert len(store) == 1
+
+    def test_v1_entries_remain_readable(self, mlp_plan, tmp_path):
+        """A store written by pre-v2 code (repr-keyed entries) must still
+        serve hits for constraint-free requests."""
+        import dataclasses as dc
+        import json as _json
+        plan = ShardingPlan.from_json(mlp_plan.to_json())
+        plan.fingerprint = "e" * 64
+        params = {"min_dims": 1,
+                  "logical_axes": [("batch", "embed"), ("embed", "hidden"),
+                                   ("hidden", "embed")]}
+        # write the entry exactly as PR 2's put() did, under the v1 key
+        key = plan_key(plan.fingerprint, plan.mesh, HardwareSpec(), params)
+        entry = {
+            "fingerprint": plan.fingerprint,
+            "params": {k: repr(v) for k, v in params.items()},
+            "mesh": plan.mesh.as_dict(),
+            "hardware": dc.asdict(HardwareSpec()),
+            "plan": plan.as_dict(),
+        }
+        tmp_path.mkdir(exist_ok=True)
+        (tmp_path / f"{key}.json").write_text(_json.dumps(entry))
+        store = PlanStore(tmp_path)
+        got = store.get(plan.fingerprint, plan.mesh, params=params)
+        assert got is not None and got.cached
+        assert got.state == plan.state
+        # constraint-bearing requests never fall back to v1 keys
+        from repro.core.constraints import Replicate
+        with_cons = dict(params, constraints=(Replicate("['x']"),))
+        assert store.get(plan.fingerprint, plan.mesh,
+                         params=with_cons) is None
