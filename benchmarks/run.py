@@ -16,6 +16,9 @@ Sections:
 - zoo:    zoo-wide portfolio auto-partitioning sweep over every config in
           repro/configs (writes BENCH_zoo.json) — the paper's "diverse
           model architectures" claim.
+- measure: measured execution of plan variants on a simulated device
+          mesh + cost-model calibration (writes BENCH_measured.json) —
+          the predict→measure→calibrate loop of docs/measure.md.
 - kernels: Pallas kernel microbenchmarks (interpret mode) vs jnp oracle.
 """
 
@@ -106,6 +109,46 @@ def zoo_sweep(out="BENCH_zoo.json", mesh="4x2", plan_store=None):
     pathlib.Path(out).write_text(json.dumps(record, indent=2))
 
 
+def measure_sweep(out="BENCH_measured.json", mesh="2x2",
+                  plan_store=None, repeats=3):
+    import json
+    import pathlib
+
+    from repro.launch import measure as lmeasure
+    from repro.launch import zoo
+    store = None
+    if plan_store:
+        from repro.ckpt.plan_store import PlanStore
+        store = PlanStore(plan_store)
+    captures = {}
+    record = zoo.run_zoo(zoo.parse_mesh(mesh), archs=zoo.SMOKE_ARCHS,
+                         shape=zoo.ZOO_SHAPE_SMOKE, plan_store=store,
+                         verbose=False, captures=captures)
+    mrec = lmeasure.measure_record(record, captures, repeats=repeats,
+                                   warmup=1, plan_store=store,
+                                   verbose=False)
+    for c in mrec["cells"]:
+        peak = c["measured_peak_bytes"]
+        peak_mb = f"{peak / 2**20:.1f}" if peak is not None else "?"
+        _row(f"measure.{c['model']}.{c['plan_label']}",
+             c["measured_s"] * 1e6,
+             f"status={c['status']};pred_us={c['predicted_s'] * 1e6:.1f};"
+             f"cal_us={c['predicted_calibrated_s'] * 1e6:.1f};"
+             f"peak_mb={peak_mb}")
+    cal = mrec["calibration"]
+    if "mean_rel_err_before" in cal:
+        _row("measure.calibration", cal["mean_rel_err_after"] * 1e6,
+             f"err_before={cal['mean_rel_err_before']:.3f};"
+             f"err_after={cal['mean_rel_err_after']:.3f};"
+             f"n={cal['n_cells']}")
+    if mrec["spearman_mean"] is not None:
+        _row("measure.spearman", mrec["spearman_mean"] * 1e6,
+             ";".join(f"{m}={v['spearman']:.2f}"
+                      for m, v in mrec["per_model"].items()
+                      if v["spearman"] is not None))
+    pathlib.Path(out).write_text(json.dumps(mrec, indent=2))
+
+
 def kernel_micro():
     from repro.kernels import ops, ref
     key = jax.random.PRNGKey(0)
@@ -136,13 +179,16 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--section", default="all",
                     choices=["all", "fig8", "fig10", "nda", "search",
-                             "zoo", "kernels"])
+                             "zoo", "measure", "kernels"])
     ap.add_argument("--models", default=",".join(MODELS))
     ap.add_argument("--search-out", default="BENCH_search.json")
     ap.add_argument("--zoo-out", default="BENCH_zoo.json")
     ap.add_argument("--zoo-mesh", default="4x2")
     ap.add_argument("--zoo-plan-store", default="",
                     help="optional plan-store dir for the zoo section")
+    ap.add_argument("--measure-out", default="BENCH_measured.json")
+    ap.add_argument("--measure-mesh", default="2x2",
+                    help="simulated mesh for the measure section")
     args = ap.parse_args()
     models = tuple(args.models.split(","))
     print("name,us_per_call,derived")
@@ -158,6 +204,9 @@ def main() -> None:
     if args.section in ("all", "zoo"):
         zoo_sweep(out=args.zoo_out, mesh=args.zoo_mesh,
                   plan_store=args.zoo_plan_store or None)
+    if args.section == "measure":       # opt-in: executes real programs
+        measure_sweep(out=args.measure_out, mesh=args.measure_mesh,
+                      plan_store=args.zoo_plan_store or None)
     if args.section in ("all", "kernels"):
         kernel_micro()
 

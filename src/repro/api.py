@@ -285,34 +285,75 @@ class Session:
                 "early_stopped": result.early_stopped,
                 "members": [m.as_dict() for m in result.members],
             }
-        summary = art.nda.color_summary()
-        plan = ShardingPlan(
-            mesh=request.mesh,
-            in_specs=_state_specs(cm, result.best_state, art.prog.inputs),
-            input_paths=art.prog.input_paths,
-            state=result.best_state,
+        plan = self._build_plan(
+            request, result.best_state, cm,
             cost=result.best_cost,
             breakdown=evaluator.evaluate(result.best_state).as_dict(),
-            baseline_breakdown=cm.baseline().as_dict(),
-            constraint_specs=_constraint_specs(cm, result.best_state,
-                                               art.analysis),
-            logical_rules=_logical_rules(art.nda, art.prog,
-                                         result.best_state, flat_names),
-            search_seconds=elapsed,
-            evaluations=result.evaluations,
-            num_colors=len(summary),
-            num_conflicts=len(art.analysis.conflicts),
-            num_compat_sets=len(art.analysis.compat_sets),
-            num_resolution_bits=art.analysis.num_resolution_bits,
-            backend=engine.name,
-            eval_stats=eval_stats,
-            fingerprint=self.fingerprint,
-            out_specs=_state_specs(cm, result.best_state,
-                                   art.prog.outputs),
-            logical_axes=flat_names,
-        )
+            backend=engine.name, search_seconds=elapsed,
+            evaluations=result.evaluations, eval_stats=eval_stats)
         if request.constraints:
             plan.check(request.constraints)
         if store is not None:
             store.put(plan, request.hw, store_params)
         return plan
+
+    def plan_for_state(self, request: Request,
+                       state: ShardingState, *,
+                       label: str = "manual") -> ShardingPlan:
+        """Materialize a :class:`ShardingPlan` for an explicit state.
+
+        No search runs: the state is projected onto input/output specs
+        and costed under the request's mesh and hardware.  This is how
+        the measured-execution backend (``repro.launch.measure``) builds
+        runnable plan variants — path prefixes, contrast anchors — of a
+        searched plan, and how external tools can replay a state from a
+        JSON plan against a fresh session.
+
+        Args:
+            request: supplies the mesh, hardware, and logical axes the
+                plan is priced and labelled with (constraints are *not*
+                enforced — the state is taken as-is).
+            state: the canonical sharding state to materialize.
+            label: recorded as the plan's ``backend`` name.
+
+        Returns:
+            A fully populated ``ShardingPlan`` for ``state``.
+        """
+        cm = self._cost_model(request.mesh, request.hw)
+        return self._build_plan(
+            request, state, cm,
+            cost=cm.paper_cost(state),
+            breakdown=cm.evaluate(state).as_dict(),
+            backend=label, search_seconds=0.0, evaluations=0,
+            eval_stats={})
+
+    def _build_plan(self, request: Request, state: ShardingState, cm,
+                    *, cost: float, breakdown: dict, backend: str,
+                    search_seconds: float, evaluations: int,
+                    eval_stats: dict) -> ShardingPlan:
+        art = self.artifacts
+        flat_names = request.flat_logical_axes()
+        summary = art.nda.color_summary()
+        return ShardingPlan(
+            mesh=request.mesh,
+            in_specs=_state_specs(cm, state, art.prog.inputs),
+            input_paths=art.prog.input_paths,
+            state=state,
+            cost=cost,
+            breakdown=breakdown,
+            baseline_breakdown=cm.baseline().as_dict(),
+            constraint_specs=_constraint_specs(cm, state, art.analysis),
+            logical_rules=_logical_rules(art.nda, art.prog, state,
+                                         flat_names),
+            search_seconds=search_seconds,
+            evaluations=evaluations,
+            num_colors=len(summary),
+            num_conflicts=len(art.analysis.conflicts),
+            num_compat_sets=len(art.analysis.compat_sets),
+            num_resolution_bits=art.analysis.num_resolution_bits,
+            backend=backend,
+            eval_stats=eval_stats,
+            fingerprint=self.fingerprint,
+            out_specs=_state_specs(cm, state, art.prog.outputs),
+            logical_axes=flat_names,
+        )

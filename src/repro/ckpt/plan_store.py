@@ -29,8 +29,12 @@ stay warm.  Writes always use v2.
 
 Layout: one ``<key>.json`` file per entry under the store directory,
 containing the metadata triple plus the full plan
-(``ShardingPlan.as_dict``).  Writes are atomic (tmp file + rename), so a
-crashed writer never leaves a truncated entry behind.
+(``ShardingPlan.as_dict``); calibrated ``HardwareSpec``s live under
+``hardware/<name>.json`` (:meth:`PlanStore.save_hardware`).  Writes are
+atomic (per-process temp file + rename), so a crashed writer never
+leaves a truncated entry behind and concurrent zoo workers cannot tear
+each other's entries; temp files orphaned by a killed process are swept
+on store open once they age past ``PlanStore.STALE_TMP_SECONDS``.
 """
 
 from __future__ import annotations
@@ -41,6 +45,7 @@ import json
 import os
 import pathlib
 import tempfile
+import time
 
 from repro.core.actions import DEFAULT_MIN_DIMS
 from repro.core.constraints import (canonical_constraints,
@@ -85,6 +90,24 @@ def _jsonify(x):
     return x
 
 
+# HardwareSpec fields added after the v2 key schema shipped.  At their
+# defaults they are dropped from cache keys so every pre-existing store
+# entry keyed under the six original fields stays warm; a *calibrated*
+# spec (non-default values) keys distinctly, as it must — plans searched
+# under different rooflines are different plans.
+_HW_LATER_FIELD_DEFAULTS = (("coll_latency", 0.0), ("axis_bw", ()))
+
+
+def _hw_key_fields(hw: HardwareSpec) -> list[tuple[str, object]]:
+    out = []
+    for f in dataclasses.fields(hw):
+        v = getattr(hw, f.name)
+        if (f.name, v) in _HW_LATER_FIELD_DEFAULTS:
+            continue
+        out.append((f.name, v))
+    return out
+
+
 def plan_key(fingerprint: str, mesh: MeshSpec,
              hw: HardwareSpec | None = None,
              params: dict | None = None) -> str:
@@ -110,8 +133,8 @@ def plan_key(fingerprint: str, mesh: MeshSpec,
     parts = [
         f"prog:{fingerprint}",
         f"mesh:{mesh.as_dict()}",
-        "hw:" + ":".join(f"{f.name}={getattr(hw, f.name)!r}"
-                         for f in dataclasses.fields(hw)),
+        "hw:" + ":".join(f"{name}={value!r}"
+                         for name, value in _hw_key_fields(hw)),
         "params:" + ":".join(f"{k}={params[k]!r}"
                              for k in sorted(params or {})),
     ]
@@ -147,8 +170,8 @@ def plan_key_v2(fingerprint: str, mesh: MeshSpec,
         "schema": PLAN_KEY_SCHEMA,
         "prog": fingerprint,
         "mesh": mesh.as_dict(),
-        "hw": {f.name: getattr(hw, f.name)
-               for f in dataclasses.fields(hw)},
+        "hw": {name: _jsonify(value)
+               for name, value in _hw_key_fields(hw)},
         "params": _jsonify(canonical_request_params(params)),
     }
     blob = json.dumps(payload, sort_keys=True, separators=(",", ":"))
@@ -202,14 +225,49 @@ class PlanStore:
     skipped).
     """
 
-    def __init__(self, directory: str | os.PathLike) -> None:
+    #: temp files older than this are considered crash leftovers and are
+    #: removed when a store is opened (a *live* concurrent writer's temp
+    #: is seconds old and survives; see ``put``).
+    STALE_TMP_SECONDS = 3600.0
+
+    def __init__(self, directory: str | os.PathLike, *,
+                 stale_tmp_seconds: float | None = None) -> None:
         """Open (or lazily create) a store rooted at ``directory``.
 
         Args:
             directory: store root; created on first write.
+            stale_tmp_seconds: age threshold for crash-leftover temp
+                cleanup on open (default ``STALE_TMP_SECONDS``).
         """
         self.directory = pathlib.Path(directory)
         self.stats = StoreStats()
+        self.stale_tmp_seconds = (self.STALE_TMP_SECONDS
+                                  if stale_tmp_seconds is None
+                                  else stale_tmp_seconds)
+        self._cleanup_stale_tmps()
+
+    def _cleanup_stale_tmps(self) -> int:
+        """Remove crash-leftover ``*.tmp`` files older than the threshold.
+
+        Returns:
+            How many stale temp files were removed.
+        """
+        if not self.directory.is_dir():
+            return 0
+        cutoff = time.time() - self.stale_tmp_seconds
+        n = 0
+        tmps = list(self.directory.glob("*.tmp")) + \
+            list(self.directory.glob("hardware/*.tmp"))
+        for p in tmps:
+            try:
+                if p.stat().st_mtime <= cutoff:
+                    p.unlink()
+                    n += 1
+            except OSError:
+                # racing another store's cleanup (or a writer committing)
+                # is fine — someone removed it first
+                pass
+        return n
 
     def _path(self, key: str) -> pathlib.Path:
         return self.directory / f"{key}.json"
@@ -285,7 +343,12 @@ class PlanStore:
             "hardware": dataclasses.asdict(hw or HardwareSpec()),
             "plan": plan.as_dict(),
         }
-        fd, tmp = tempfile.mkstemp(dir=self.directory, suffix=".tmp")
+        # per-process temp names: concurrent zoo workers each write their
+        # own temp and the os.replace commit is atomic, so two writers on
+        # one key cannot interleave into a truncated entry
+        fd, tmp = tempfile.mkstemp(dir=self.directory,
+                                   prefix=f"put-{os.getpid()}-",
+                                   suffix=".tmp")
         try:
             with os.fdopen(fd, "w") as f:
                 json.dump(entry, f, indent=2)
@@ -298,6 +361,60 @@ class PlanStore:
             raise
         self.stats.puts += 1
         return path
+
+    # -- calibrated-hardware round-trip --------------------------------------
+
+    def _hw_path(self, name: str) -> pathlib.Path:
+        return self.directory / "hardware" / f"{name}.json"
+
+    def save_hardware(self, hw: HardwareSpec,
+                      name: str = "calibrated") -> pathlib.Path:
+        """Persist a (calibrated) ``HardwareSpec`` alongside the plans.
+
+        The measured-execution backend saves the fitted roofline here so
+        subsequent searches (``zoo --use-calibrated-hw``) price plans
+        with coefficients that track the measured device instead of the
+        data-sheet defaults.  Written atomically, like plan entries.
+
+        Args:
+            hw: the spec to save.
+            name: spec name (one store can hold several).
+
+        Returns:
+            The path written.
+        """
+        path = self._hw_path(name)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=path.parent,
+                                   prefix=f"put-{os.getpid()}-",
+                                   suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(hw.as_dict(), f, indent=2)
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+        return path
+
+    def load_hardware(self, name: str = "calibrated"
+                      ) -> HardwareSpec | None:
+        """Load a previously saved ``HardwareSpec``.
+
+        Args:
+            name: spec name used at :meth:`save_hardware` time.
+
+        Returns:
+            The spec, or ``None`` when absent/unreadable.
+        """
+        path = self._hw_path(name)
+        try:
+            return HardwareSpec.from_dict(json.loads(path.read_text()))
+        except (OSError, ValueError, TypeError, KeyError):
+            return None
 
     def __len__(self) -> int:
         """Number of committed entries in the store directory."""

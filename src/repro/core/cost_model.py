@@ -44,12 +44,66 @@ from repro.core.nda import NDAResult
 
 @dataclasses.dataclass(frozen=True)
 class HardwareSpec:
+    """Roofline constants the cost model prices sharding states with.
+
+    The defaults describe a TPU v5e chip; ``repro.core.measure`` fits
+    these coefficients to *measured* executions on a simulated mesh
+    (``calibrate_hardware``) and the calibrated spec round-trips through
+    JSON / the plan store (:meth:`as_dict` / :meth:`from_dict`).
+
+    Attributes:
+        flops_per_chip: peak per-chip FLOP/s (bf16).
+        hbm_bw: HBM bandwidth, bytes/s.
+        ici_bw: per-link inter-chip bandwidth, bytes/s (per mesh axis).
+        dcn_bw: cross-pod bandwidth for ``MeshSpec.dcn_axes``.
+        hbm_per_chip: per-device memory budget in bytes.
+        mem_penalty_scale: the paper's memory-penalty constant C.
+        coll_latency: fixed cost per collective per mesh axis, seconds
+            (0.0 keeps the pre-calibration pure-bandwidth model).
+        axis_bw: per-mesh-axis bandwidth overrides as sorted
+            ``((axis, bytes/s), ...)`` pairs; axes absent here fall back
+            to ``ici_bw`` / ``dcn_bw``.
+    """
+
     flops_per_chip: float = 197e12      # bf16 peak
     hbm_bw: float = 819e9               # bytes/s
     ici_bw: float = 50e9                # bytes/s per link (per mesh axis)
     dcn_bw: float = 6.25e9              # bytes/s cross-pod (50 Gbit)
     hbm_per_chip: float = 16e9          # v5e: 16 GiB
     mem_penalty_scale: float = 10.0     # paper's constant C
+    coll_latency: float = 0.0           # s per collective per axis
+    axis_bw: tuple[tuple[str, float], ...] = ()
+
+    def __post_init__(self) -> None:
+        """Normalize ``axis_bw`` spellings (dict / lists) to sorted tuples."""
+        bw = self.axis_bw
+        if isinstance(bw, dict):
+            bw = bw.items()
+        norm = tuple(sorted((str(a), float(b)) for a, b in bw))
+        object.__setattr__(self, "axis_bw", norm)
+
+    def as_dict(self) -> dict:
+        """JSON-serializable dict (inverse of :meth:`from_dict`)."""
+        d = dataclasses.asdict(self)
+        d["axis_bw"] = [[a, b] for a, b in self.axis_bw]
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "HardwareSpec":
+        """Rebuild a spec from :meth:`as_dict` output.
+
+        Args:
+            d: dict with any subset of the spec's fields (unknown keys
+                are ignored; missing ones keep their defaults).
+
+        Returns:
+            The reconstructed ``HardwareSpec``.
+        """
+        names = {f.name for f in dataclasses.fields(cls)}
+        kw = {k: v for k, v in d.items() if k in names}
+        if "axis_bw" in kw and kw["axis_bw"] is not None:
+            kw["axis_bw"] = tuple((a, float(b)) for a, b in kw["axis_bw"])
+        return cls(**kw)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,8 +113,45 @@ class MeshSpec:
     # axes whose links traverse DCN rather than ICI (e.g. "pod")
     dcn_axes: tuple[str, ...] = ()
 
+    def __post_init__(self) -> None:
+        """Validate the mesh shape eagerly, with actionable errors."""
+        if len(self.axes) != len(self.sizes):
+            raise ValueError(
+                f"mesh has {len(self.axes)} axes {tuple(self.axes)} but "
+                f"{len(self.sizes)} sizes {tuple(self.sizes)}")
+        if len(set(self.axes)) != len(self.axes):
+            raise ValueError(f"duplicate mesh axis names: {tuple(self.axes)}")
+        for a, s in zip(self.axes, self.sizes):
+            if int(s) != s or s < 1:
+                raise ValueError(
+                    f"mesh axis {a!r} has invalid size {s!r} "
+                    f"(sizes must be positive integers)")
+        unknown = [a for a in self.dcn_axes if a not in self.axes]
+        if unknown:
+            raise ValueError(
+                f"dcn_axes {unknown} are not mesh axes {tuple(self.axes)}")
+
     def size(self, axis: str) -> int:
-        return self.sizes[self.axes.index(axis)]
+        """Size of one mesh axis.
+
+        Args:
+            axis: mesh axis name.
+
+        Returns:
+            The axis size.
+
+        Raises:
+            ValueError: when ``axis`` is not one of the mesh's axes (the
+                message lists the valid names — a bare ``tuple.index``
+                ``ValueError`` here used to hide the typo).
+        """
+        try:
+            i = self.axes.index(axis)
+        except ValueError:
+            raise ValueError(
+                f"unknown mesh axis {axis!r}; valid axes: "
+                f"{tuple(self.axes)}") from None
+        return self.sizes[i]
 
     @property
     def num_devices(self) -> int:
@@ -145,7 +236,48 @@ class CostModel:
         # cache: bits tuple -> frozenset of suppressed groups
         self._suppressed_cache: dict[tuple, frozenset] = {}
         self._axis_size = dict(zip(mesh.axes, mesh.sizes))
+        self._axis_bw_map = dict(hw.axis_bw)
+        # optional per-axis collective recorder (see state_features)
+        self._tally: dict | None = None
         self._build_static_tables()
+        self._build_base_rows()
+
+    def with_hardware(self, hw: HardwareSpec) -> "CostModel":
+        """A cost model for the same analysis under different hardware.
+
+        Re-costing a program under a calibrated ``HardwareSpec`` must not
+        pay for re-analysis: the static tables built by ``__init__`` —
+        per-op site infos, dirty-set indices, live-range intervals — are
+        all hardware-independent and are *shared* with the new model;
+        only the unsharded base cost rows (a function of the roofline
+        constants) are recomputed.
+
+        Args:
+            hw: the hardware spec the new model prices with.
+
+        Returns:
+            A fresh ``CostModel`` over the same (program, mesh) with
+            empty evaluation caches.
+        """
+        cm = object.__new__(CostModel)
+        cm.prog, cm.nda, cm.analysis = self.prog, self.nda, self.analysis
+        cm.mesh, cm.hw = self.mesh, hw
+        cm.use_site = self.use_site
+        cm.last_use = self.last_use
+        cm._baseline = None
+        cm._cache = {}
+        cm._suppressed_cache = self._suppressed_cache   # analysis-only
+        cm._axis_size = self._axis_size
+        cm._axis_bw_map = dict(hw.axis_bw)
+        cm._tally = None
+        # hardware-independent static tables, shared read-only
+        for name in ("_op_specs", "_color_ops", "_group_ops", "_sg_groups",
+                     "_live_vids", "_vid_slot", "_live_start", "_live_end",
+                     "_val_info", "_color_vals", "_group_vals",
+                     "_base_val_bytes", "_base_delta", "_base_peak"):
+            setattr(cm, name, getattr(self, name))
+        cm._build_base_rows()
+        return cm
 
     # -- static tables (built once per Program × MeshSpec) -------------------
 
@@ -249,9 +381,11 @@ class CostModel:
         self._base_peak = float(
             self._base_delta.cumsum()[:n_ops + 1].max()) if vids else 0.0
 
-        # unsharded per-op cost rows and their totals
+    def _build_base_rows(self) -> None:
+        """Unsharded per-op cost rows and their totals (hardware-dependent
+        — rebuilt by ``with_hardware``; everything else is shared)."""
         self.base_rows = [self.op_cost_row(i, {}, _EMPTY)
-                          for i in range(n_ops)]
+                          for i in range(len(self.prog.ops))]
         totals = [0.0] * _ROW_FIELDS
         for row in self.base_rows:
             for k in range(_ROW_FIELDS):
@@ -304,7 +438,14 @@ class CostModel:
                 continue
             ok: list[str] = []
             for a in axes:
-                f = self._axis_size[a]
+                f = self._axis_size.get(a)
+                if f is None:
+                    # a hand-built state / ConstraintSet can carry a typo'd
+                    # axis that compile_constraints never saw — fail with
+                    # the valid names instead of a bare KeyError
+                    raise ValueError(
+                        f"sharding state uses unknown mesh axis {a!r}; "
+                        f"valid axes: {tuple(self.mesh.axes)}")
                 if a in seen_axes or size % f != 0 or size < f:
                     continue
                 ok.append(a)
@@ -321,23 +462,41 @@ class CostModel:
         return f
 
     def _axis_bw(self, axis: str) -> float:
+        bw = self._axis_bw_map.get(axis)
+        if bw is not None:
+            return bw
         return (self.hw.dcn_bw if axis in self.mesh.dcn_axes
                 else self.hw.ici_bw)
 
-    def _collective(self, kind: str, full_bytes: float, axes) -> float:
-        """Time for a collective over the given mesh axes."""
+    def _collective(self, kind: str, full_bytes: float, axes,
+                    trip: int = 1) -> float:
+        """Time for a collective over the given mesh axes (``trip`` times).
+
+        Each axis contributes a bandwidth term (the standard ring
+        coefficients on the *effective* bytes) plus ``hw.coll_latency``
+        per collective launch.  When a feature tally is installed
+        (``state_features``) the per-axis effective bytes and launch
+        counts are recorded — the linear features calibration fits
+        bandwidths and latency against.
+        """
         t = 0.0
         for a in axes:
             n = self._axis_size[a]
             if n <= 1:
                 continue
-            bw = self._axis_bw(a)
             if kind == "all_reduce":
-                t += 2.0 * (n - 1) / n * full_bytes / bw
+                eff = 2.0 * (n - 1) / n * full_bytes
             elif kind in ("all_gather", "reduce_scatter"):
-                t += (n - 1) / n * full_bytes / bw
+                eff = (n - 1) / n * full_bytes
             elif kind == "all_to_all":
-                t += (n - 1) / (n * n) * full_bytes / bw
+                eff = (n - 1) / (n * n) * full_bytes
+            else:
+                continue
+            t += (eff / self._axis_bw(a) + self.hw.coll_latency) * trip
+            if self._tally is not None:
+                self._tally["coll_bytes"][a] = \
+                    self._tally["coll_bytes"].get(a, 0.0) + eff * trip
+                self._tally["coll_count"] += trip
         return t
 
     # -- per-op / per-value costing ------------------------------------------
@@ -376,7 +535,7 @@ class CostModel:
             out_local = sum(nb / self._factor(a)
                             for nb, a in zip(resnb, out_axes))
             coll += self._collective("all_reduce", out_local,
-                                     contract_axes) * trip
+                                     contract_axes, trip)
             comm += out_local * 2 * trip
         return (max(t_comp, t_mem) * trip, t_mem * trip, coll,
                 flops * trip, comm)
@@ -525,8 +684,9 @@ class CostModel:
             if contract_axes:
                 out_local = sum(local_bytes(r, a)
                                 for r, a in zip(op.results, out_axes))
-                t = self._collective("all_reduce", out_local, contract_axes)
-                bd.collective_time += t * trip
+                t = self._collective("all_reduce", out_local, contract_axes,
+                                     trip)
+                bd.collective_time += t
                 bd.comm_bytes += out_local * 2 * trip
 
             # 4. live-range memory
@@ -559,15 +719,15 @@ class CostModel:
         moved = set(gathered) & set(scattered)
         for a in moved:        # axis moved between dims -> all_to_all
             local = nbytes / self._factor(da)
-            t += self._collective("all_to_all", local, [a])
+            t += self._collective("all_to_all", local, [a], trip)
             b += local / self._axis_size[a]
             gathered.remove(a)
         if gathered:           # remaining: all_gather
             within = nbytes / self._factor(
                 [tuple(a for a in ax if a not in gathered) for ax in da])
-            t += self._collective("all_gather", within, gathered)
+            t += self._collective("all_gather", within, gathered, trip)
             b += within
-        return t * trip, b * trip
+        return t, b * trip
 
     def _op_flops(self, op, use_axes, out_axes):
         """Local FLOPs of the op and the axes sharding contracting dims."""
@@ -629,3 +789,41 @@ class CostModel:
     def paper_cost(self, state: ShardingState) -> float:
         """C(s) = RT(s) + MP(s) — paper §4.5."""
         return self.cost_from_breakdown(self.evaluate(state))
+
+    # -- calibration features ------------------------------------------------
+
+    def state_features(self, state: ShardingState) -> dict:
+        """Linear calibration features of one sharding state.
+
+        One dense evaluation with the per-axis collective tally
+        installed.  The returned terms are *hardware-independent work
+        quantities* — ``repro.core.measure.calibrate_hardware`` fits the
+        roofline coefficients so that::
+
+            t ≈ flops/F + hbm_bytes/B + Σ_axis coll_bytes[a]/bw[a]
+                + coll_count · latency
+
+        matches measured wall time in the least-squares sense.
+
+        Args:
+            state: canonical sharding state to featurize.
+
+        Returns:
+            ``{"flops", "hbm_bytes", "coll_bytes": {axis: effective
+            bytes}, "coll_count", "runtime", "peak_bytes"}`` — the last
+            two priced under this model's current hardware.
+        """
+        tally = {"coll_bytes": {}, "coll_count": 0.0}
+        self._tally = tally
+        try:
+            bd = self.evaluate_dense(state)
+        finally:
+            self._tally = None
+        return {
+            "flops": bd.flops,
+            "hbm_bytes": bd.memory_time * self.hw.hbm_bw,
+            "coll_bytes": tally["coll_bytes"],
+            "coll_count": tally["coll_count"],
+            "runtime": bd.runtime,
+            "peak_bytes": bd.peak_bytes,
+        }

@@ -1,0 +1,300 @@
+"""Measured execution: calibration math and plan-variant selection.
+
+The analytic roofline in ``repro.core.cost_model`` predicts runtimes; the
+measured-execution backend (``repro.launch.measure``) *runs* plans on a
+simulated multi-device CPU mesh and times them.  This module holds the
+pure half of that loop:
+
+- :func:`candidate_states` — which sharding states to measure for one
+  model: the unsharded root, prefixes of the searched best plan's action
+  path, the best plan itself, and a predicted-worst single action as a
+  contrast anchor (so rank correlation has real spread to rank).
+- :func:`spearman` — rank correlation between predicted and measured
+  orderings (tie-aware, numpy only).
+- :func:`fit_hardware` — least-squares fit of the
+  :class:`~repro.core.cost_model.HardwareSpec` roofline coefficients
+  (FLOP/s, HBM bandwidth, per-axis collective bandwidth, collective
+  latency) to measured cells, using the linear features from
+  ``CostModel.state_features``::
+
+      t ≈ flops/F + hbm_bytes/B + Σ_a coll_bytes[a]/bw_a
+          + coll_count · latency
+
+  which is linear in ``(1/F, 1/B, 1/bw_a, latency)``; the fit is a
+  non-negative least squares (iterative clipping of negative
+  coefficients) on max-normalized columns.
+
+Everything here is process-local and deterministic; the subprocess
+isolation, wall-clock timing and zoo wiring live in
+``repro.launch.measure``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.core.cost_model import HardwareSpec, ShardingState
+from repro.core.search import recover_actions
+
+
+@dataclasses.dataclass
+class MeasuredCell:
+    """One (model × plan-variant) execution record.
+
+    Attributes:
+        model: zoo config id the cell belongs to.
+        plan_label: variant label from :func:`candidate_states`
+            ("unsharded", "best", "prefix@k", "worst1").
+        mesh: the mesh string ("2x2").
+        devices: simulated device count the plan ran on.
+        status: "ok", "oom", "compile_error", "timeout", or "error".
+        cost: the plan's paper cost ``C(s)`` under the prediction hw.
+        predicted_s: analytic runtime under the *uncalibrated* hardware.
+        predicted_calibrated_s: analytic runtime re-costed under the
+            calibrated hardware (filled by the calibration pass).
+        measured_s: median wall time over the timed repeats.
+        runs_s: every timed repeat, seconds.
+        compile_s: lower+compile wall time in the worker.
+        predicted_peak_bytes: cost-model per-device peak.
+        measured_peak_bytes: compiled ``memory_analysis()`` per-device
+            peak (args + temps + outputs); ``None`` when the backend
+            offers no memory analysis.
+        feasible: measured peak within the hardware memory budget (and
+            the run did not OOM); ``None`` when the peak is unknown.
+        error: diagnostic string for non-"ok" statuses.
+        features: linear calibration features
+            (``CostModel.state_features``).
+    """
+
+    model: str
+    plan_label: str
+    mesh: str = ""
+    devices: int = 0
+    status: str = "ok"
+    cost: float = 0.0
+    predicted_s: float = 0.0
+    predicted_calibrated_s: float = 0.0
+    measured_s: float = 0.0
+    runs_s: list = dataclasses.field(default_factory=list)
+    compile_s: float = 0.0
+    predicted_peak_bytes: float = 0.0
+    measured_peak_bytes: float | None = 0.0
+    feasible: bool | None = True
+    error: str = ""
+    features: dict = dataclasses.field(default_factory=dict)
+
+    def as_dict(self) -> dict:
+        """Plain-dict view (JSON-serializable)."""
+        return dataclasses.asdict(self)
+
+
+def candidate_states(best_state: ShardingState, *, actions=None,
+                     cost_fn=None, k: int = 4
+                     ) -> list[tuple[str, ShardingState]]:
+    """Distinct sharding states worth timing for one model.
+
+    Always includes the unsharded root and the searched best state;
+    fills up to ``k`` with evenly spaced prefixes of the best state's
+    action path and — when an action space and cost function are given —
+    the single action with the *worst* predicted cost from the root (a
+    comm-heavy contrast anchor that gives the measured ordering spread).
+
+    Args:
+        best_state: the searched plan's canonical state.
+        actions: optional pruned action space (for the "worst1" anchor).
+        cost_fn: optional ``state -> paper cost`` callable (for
+            "worst1").
+        k: target number of variants (at least 3 are produced whenever
+            the best state is non-empty).
+
+    Returns:
+        ``[(label, state), ...]`` with distinct states, measurement
+        order.
+    """
+    out: list[tuple[str, ShardingState]] = [("unsharded", ShardingState())]
+    seen = {ShardingState()}
+
+    def add(label: str, state: ShardingState) -> None:
+        if state not in seen:
+            seen.add(state)
+            out.append((label, state))
+
+    path = recover_actions(best_state)
+    add("best", best_state)
+
+    if actions is not None and cost_fn is not None:
+        worst, worst_cost = None, -math.inf
+        for a in actions:
+            child = a.apply(ShardingState())
+            c = cost_fn(child)
+            if c > worst_cost:
+                worst, worst_cost = child, c
+        if worst is not None:
+            add("worst1", worst)
+
+    # evenly spaced prefixes of the best plan's action path, midpoint first
+    depths: list[int] = []
+    n = len(path)
+    for denom in (2, 3, 4):
+        for num in range(1, denom):
+            d = (n * num) // denom
+            if 0 < d < n and d not in depths:
+                depths.append(d)
+    for d in depths:
+        if len(out) >= k:
+            break
+        state = ShardingState()
+        for a in path[:d]:
+            state = a.apply(state)
+        add(f"prefix@{d}", state)
+    return out[:max(k, 3)]
+
+
+def _ranks(values) -> np.ndarray:
+    """Average ranks (1-based) with ties sharing their mean rank."""
+    v = np.asarray(values, dtype=float)
+    order = np.argsort(v, kind="stable")
+    ranks = np.empty(len(v))
+    i = 0
+    while i < len(v):
+        j = i
+        while j + 1 < len(v) and v[order[j + 1]] == v[order[i]]:
+            j += 1
+        ranks[order[i:j + 1]] = (i + j) / 2.0 + 1.0
+        i = j + 1
+    return ranks
+
+
+def spearman(xs, ys) -> float:
+    """Spearman rank correlation between two samples.
+
+    Args:
+        xs: first sample (e.g. predicted runtimes).
+        ys: second sample (e.g. measured runtimes), same length.
+
+    Returns:
+        Rank correlation in [-1, 1]; 0.0 for degenerate inputs (fewer
+        than two points or zero variance).
+    """
+    if len(xs) != len(ys):
+        raise ValueError(f"length mismatch: {len(xs)} vs {len(ys)}")
+    if len(xs) < 2:
+        return 0.0
+    rx, ry = _ranks(xs), _ranks(ys)
+    sx, sy = rx.std(), ry.std()
+    if sx == 0.0 or sy == 0.0:
+        return 0.0
+    return float(((rx - rx.mean()) * (ry - ry.mean())).mean() / (sx * sy))
+
+
+# fitted bandwidths / FLOP rates are clamped into a sane physical range
+_COEF_MIN, _COEF_MAX = 1e3, 1e18
+
+
+def linear_predict(features: dict, hw: HardwareSpec) -> float:
+    """The linear calibration model's runtime prediction for one cell.
+
+    Args:
+        features: ``CostModel.state_features`` output.
+        hw: hardware spec supplying the coefficients (per-axis
+            ``axis_bw`` overrides fall back to ``ici_bw``).
+
+    Returns:
+        Predicted seconds under the linear (sum, not roofline-max)
+        model.
+    """
+    bw = dict(hw.axis_bw)
+    t = features["flops"] / hw.flops_per_chip
+    t += features["hbm_bytes"] / hw.hbm_bw
+    for a, b in features["coll_bytes"].items():
+        t += b / bw.get(a, hw.ici_bw)
+    t += features["coll_count"] * hw.coll_latency
+    return t
+
+
+def fit_hardware(cells: list[dict], hw0: HardwareSpec,
+                 axes: tuple[str, ...]) -> HardwareSpec:
+    """Least-squares fit of the roofline coefficients to measured cells.
+
+    Solves ``A θ ≈ t`` for ``θ = (1/F, 1/B, 1/bw_axis..., latency)``
+    with non-negativity enforced by iteratively dropping negative
+    coefficients (dropped coefficients keep their ``hw0`` value).
+    Columns are max-normalized before solving so FLOPs (~1e9) and
+    collective counts (~1e2) condition equally.
+
+    Args:
+        cells: ``[{"features": CostModel.state_features(...),
+            "measured_s": float}, ...]`` — only cells measured
+            successfully.
+        hw0: the spec whose non-fitted constants (memory budget, penalty
+            scale, DCN bandwidth) carry over.
+        axes: mesh axes to fit per-axis collective bandwidths for.
+
+    Returns:
+        The calibrated ``HardwareSpec``.
+
+    Raises:
+        ValueError: when ``cells`` is empty.
+    """
+    if not cells:
+        raise ValueError("cannot calibrate hardware from zero measured "
+                         "cells")
+    cols = ["flops", "hbm_bytes"] + [f"bw:{a}" for a in axes] + ["latency"]
+
+    def feat_row(f: dict) -> list[float]:
+        row = [float(f["flops"]), float(f["hbm_bytes"])]
+        row += [float(f["coll_bytes"].get(a, 0.0)) for a in axes]
+        row.append(float(f["coll_count"]))
+        return row
+
+    A = np.asarray([feat_row(c["features"]) for c in cells])
+    t = np.asarray([float(c["measured_s"]) for c in cells])
+    scale = A.max(axis=0)
+    active = [i for i, s in enumerate(scale) if s > 0.0]
+    theta = np.zeros(A.shape[1])
+    while active:
+        An = A[:, active] / scale[active]
+        sol, *_ = np.linalg.lstsq(An, t, rcond=None)
+        if sol.min() >= 0.0:
+            theta[active] = sol / scale[active]
+            break
+        # drop the most negative coefficient and refit
+        del active[int(np.argmin(sol))]
+
+    def inv(x: float, fallback: float) -> float:
+        if x <= 0.0:
+            return fallback
+        return float(np.clip(1.0 / x, _COEF_MIN, _COEF_MAX))
+
+    axis_bw = tuple(
+        (a, inv(theta[2 + i], hw0.ici_bw)) for i, a in enumerate(axes))
+    return HardwareSpec(
+        flops_per_chip=inv(theta[0], hw0.flops_per_chip),
+        hbm_bw=inv(theta[1], hw0.hbm_bw),
+        ici_bw=hw0.ici_bw,
+        dcn_bw=hw0.dcn_bw,
+        hbm_per_chip=hw0.hbm_per_chip,
+        mem_penalty_scale=hw0.mem_penalty_scale,
+        # a dropped latency column (theta 0) keeps hw0's value, like
+        # every other dropped coefficient
+        coll_latency=(float(theta[-1]) if theta[-1] > 0.0
+                      else hw0.coll_latency),
+        axis_bw=axis_bw,
+    )
+
+
+def mean_relative_error(pred, meas) -> float:
+    """Mean of ``|pred - meas| / meas`` over paired samples.
+
+    Args:
+        pred: predicted values.
+        meas: measured values (zero entries are skipped).
+
+    Returns:
+        The mean relative error, or ``0.0`` with no valid pairs.
+    """
+    errs = [abs(p - m) / m for p, m in zip(pred, meas) if m > 0.0]
+    return float(np.mean(errs)) if errs else 0.0

@@ -314,7 +314,9 @@ class AppliedPlan:
     ``jax.jit``'s ``in_shardings``/``out_shardings`` must mirror the
     argument and output pytree structures, which are only known once
     arguments arrive.  The jitted function is cached per argument
-    treedef, so steady-state calls pay one dict lookup.
+    (treedef, shape/dtype struct) — treedef alone is not enough, since
+    the output structure (and hence ``out_shardings``) can depend on the
+    input shapes — so steady-state calls pay one dict lookup.
     """
 
     def __init__(self, plan: "ShardingPlan", fn: Callable,
@@ -333,6 +335,13 @@ class AppliedPlan:
         self._jit_kwargs = dict(jit_kwargs)
         self._cache: dict = {}
 
+    @staticmethod
+    def _leaf_aval(x) -> tuple:
+        dtype = getattr(x, "dtype", None)
+        if dtype is None:
+            dtype = jax.numpy.result_type(x)
+        return (tuple(getattr(x, "shape", ())), str(dtype))
+
     def _jitted(self, args: tuple, kwargs: dict):
         if kwargs:
             raise ValueError(
@@ -344,7 +353,13 @@ class AppliedPlan:
                 f"plan has {len(self.plan.in_specs)} input specs but the "
                 f"call provides {len(flat)} argument leaves")
         args_def = jax.tree_util.tree_structure(args)
-        hit = self._cache.get(args_def)
+        # key on the full (treedef, shape/dtype struct): out_shardings are
+        # built from eval_shape of the *first* call's avals, and a
+        # function's output structure may change with its input shapes —
+        # reusing a treedef-keyed entry across different arg shapes served
+        # a stale jitted function (regression: tests/test_api.py)
+        key = (args_def, tuple(self._leaf_aval(x) for x in flat))
+        hit = self._cache.get(key)
         if hit is not None:
             return hit
         in_sh = jax.tree_util.tree_unflatten(
@@ -363,7 +378,7 @@ class AppliedPlan:
                           for s in self.plan.out_specs])
         jitted = jax.jit(self.fn, in_shardings=in_sh, out_shardings=out_sh,
                          **self._jit_kwargs)
-        self._cache[args_def] = jitted
+        self._cache[key] = jitted
         return jitted
 
     def __call__(self, *args, **kwargs):

@@ -17,7 +17,13 @@ Usage::
     python -m repro.launch.zoo --mesh 4x2
     python -m repro.launch.zoo --mesh 4x2            # second run: all cached
     python -m repro.launch.zoo --mesh 8x4 --backend mcts --no-plan-store
+    python -m repro.launch.zoo --mesh 2x2 --measure --smoke   # run for real
     python -m benchmarks.run --section zoo           # BENCH_zoo.json only
+
+``--measure`` executes plan variants on a simulated device mesh, adds a
+measured column + predicted-vs-measured rank correlation, calibrates the
+cost model against the measurements, and writes ``BENCH_measured.json``
+(see ``docs/measure.md``).
 
 By default models run in their ``reduced()`` (CPU-smoke) size with a
 small train shape so the whole zoo finishes in well under a minute;
@@ -55,6 +61,15 @@ ZOO_SHAPE = ShapeConfig("zoo_small", seq_len=512, global_batch=8,
                         kind="train")
 ZOO_SHAPE_FULL = ShapeConfig("zoo_full", seq_len=4096, global_batch=256,
                              kind="train")
+# small cell + model subset for `--smoke`: small enough that every plan
+# variant *executes* in seconds on a simulated CPU mesh, but big enough
+# that measured runtimes differ by more than host noise (at seq 64 every
+# variant is ~90ms of dispatch overhead and rank correlation is a coin
+# flip; at seq 256 sharding visibly pays); two model families so the
+# calibration fit is overdetermined (not an interpolation)
+ZOO_SHAPE_SMOKE = ShapeConfig("zoo_smoke", seq_len=256, global_batch=8,
+                              kind="train")
+SMOKE_ARCHS = ("qwen2_05b", "mixtral_8x22b")
 
 
 def zoo_portfolio(seeds: int = 2, workers: int | None = 2
@@ -99,10 +114,23 @@ def parse_mesh(spec: str) -> MeshSpec:
 
     Returns:
         The corresponding ``MeshSpec`` (``pod`` marked as a DCN axis).
+
+    Raises:
+        ValueError: on malformed specs — empty strings, missing sizes
+            (``"4x"``), non-integers, zero/negative sizes, or more than
+            4 axes — with a message naming the expected form (the CLI
+            turns it into a usage error instead of a traceback).
     """
-    sizes = tuple(int(s) for s in spec.lower().split("x"))
-    if not sizes or any(s < 1 for s in sizes):
-        raise ValueError(f"bad mesh spec {spec!r}")
+    parts = (spec or "").strip().lower().split("x")
+    try:
+        sizes = tuple(int(p) for p in parts)
+    except ValueError:
+        raise ValueError(
+            f"bad mesh spec {spec!r}: expected 'x'-separated positive "
+            f"integer sizes, e.g. '4x2' or '2x4x2'") from None
+    if any(s < 1 for s in sizes):
+        raise ValueError(f"bad mesh spec {spec!r}: axis sizes must be "
+                         f">= 1, got {sizes}")
     names = _AXIS_NAMES.get(len(sizes))
     if names is None:
         raise ValueError(f"mesh spec {spec!r} has {len(sizes)} axes; "
@@ -118,7 +146,8 @@ def run_model(arch: str, mesh: MeshSpec, *,
               search_config=None,
               plan_store: PlanStore | None = None,
               full: bool = False,
-              min_dims: int = 10) -> dict:
+              min_dims: int = 10,
+              capture: dict | None = None) -> dict:
     """Auto-partition one zoo model and summarize the outcome.
 
     Args:
@@ -131,6 +160,9 @@ def run_model(arch: str, mesh: MeshSpec, *,
         plan_store: optional persistent plan cache.
         full: trace the production config instead of ``reduced()``.
         min_dims: action-space pruning threshold.
+        capture: optional dict; on success ``capture[arch]`` receives
+            ``(session, request, plan)`` so the measured-execution pass
+            can re-cost and execute plan variants without re-analysis.
 
     Returns:
         A flat JSON-friendly result row; ``row["status"]`` is ``"ok"`` or
@@ -146,10 +178,13 @@ def run_model(arch: str, mesh: MeshSpec, *,
         fn, args, names = step_and_inputs(cfg, shape)
         sess = Session(fn, args, plan_store=plan_store)
         t_analysis = sess.analysis_seconds
-        plan = sess.partition(Request(
+        request = Request(
             mesh=mesh, hw=hw, backend=backend,
             search_config=search_config, min_dims=min_dims,
-            logical_axes=names))
+            logical_axes=names)
+        plan = sess.partition(request)
+        if capture is not None:
+            capture[arch] = (sess, request, plan)
     except Exception as e:                      # noqa: BLE001
         row.update(status="error", error=repr(e),
                    traceback=traceback.format_exc(limit=5))
@@ -186,7 +221,8 @@ def run_zoo(mesh: MeshSpec, *, archs: tuple[str, ...] | None = None,
             plan_store: PlanStore | None = None,
             full: bool = False,
             min_dims: int = 10,
-            verbose: bool = True) -> dict:
+            verbose: bool = True,
+            captures: dict | None = None) -> dict:
     """Sweep the whole config zoo on one mesh.
 
     Args:
@@ -201,6 +237,8 @@ def run_zoo(mesh: MeshSpec, *, archs: tuple[str, ...] | None = None,
         full: use production configs instead of ``reduced()``.
         min_dims: action-space pruning threshold.
         verbose: print progress lines as models finish.
+        captures: optional dict collecting per-arch ``(session, request,
+            plan)`` for the ``--measure`` pass (see ``run_model``).
 
     Returns:
         The sweep record: ``{"mesh", "shape", "backend", "results": [...],
@@ -217,7 +255,7 @@ def run_zoo(mesh: MeshSpec, *, archs: tuple[str, ...] | None = None,
         t = time.perf_counter()
         row = run_model(arch, mesh, shape=shape, hw=hw, backend=backend,
                         search_config=search_config, plan_store=plan_store,
-                        full=full, min_dims=min_dims)
+                        full=full, min_dims=min_dims, capture=captures)
         rows.append(row)
         if verbose:
             if row["status"] == "ok":
@@ -293,8 +331,9 @@ def main(argv: list[str] | None = None) -> dict:
         description="Auto-partition every zoo config on one mesh.")
     ap.add_argument("--mesh", default="4x2",
                     help="mesh sizes, e.g. 4x2 or 2x4x2")
-    ap.add_argument("--archs", default=",".join(ARCH_IDS),
-                    help="comma-separated subset of the zoo")
+    ap.add_argument("--archs", default=None,
+                    help="comma-separated subset of the zoo (default: "
+                         "all models; with --smoke: the smoke subset)")
     ap.add_argument("--backend", default="portfolio",
                     help="search backend (portfolio | mcts | beam | "
                          "greedy)")
@@ -310,19 +349,57 @@ def main(argv: list[str] | None = None) -> dict:
     ap.add_argument("--no-plan-store", action="store_true",
                     help="disable the plan cache")
     ap.add_argument("--out", default="BENCH_zoo.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny cell + model subset so --measure finishes "
+                         "in minutes (the CI fast path)")
+    ap.add_argument("--measure", action="store_true",
+                    help="execute plan variants on a simulated device "
+                         "mesh, calibrate the cost model, write "
+                         "--measure-out")
+    ap.add_argument("--measure-out", default="BENCH_measured.json")
+    ap.add_argument("--measure-repeats", type=int, default=5,
+                    help="timed executions per cell (median reported)")
+    ap.add_argument("--measure-warmup", type=int, default=1)
+    ap.add_argument("--measure-plans", type=int, default=4,
+                    help="plan variants measured per model (>= 3)")
+    ap.add_argument("--measure-timeout", type=float, default=900.0,
+                    help="per-cell worker budget, seconds")
+    ap.add_argument("--use-calibrated-hw", action="store_true",
+                    help="price plans with the calibrated HardwareSpec "
+                         "saved in the plan store by a previous "
+                         "--measure run")
     args = ap.parse_args(argv)
 
-    mesh = parse_mesh(args.mesh)
+    try:
+        mesh = parse_mesh(args.mesh)
+    except ValueError as e:
+        ap.error(str(e))                        # usage + exit 2
     store = None if args.no_plan_store else PlanStore(args.plan_store)
+    hw = HardwareSpec()
+    if args.use_calibrated_hw:
+        cal = store.load_hardware() if store is not None else None
+        if cal is None:
+            ap.error("--use-calibrated-hw: no calibrated hardware in the "
+                     "plan store; run with --measure first")
+        hw = cal
+        print(f"using calibrated hardware from {args.plan_store}")
     search_config = None
     if args.backend == "portfolio":
         search_config = zoo_portfolio(seeds=args.seeds,
                                       workers=args.workers or 2)
 
-    record = run_zoo(mesh, archs=tuple(args.archs.split(",")),
+    if args.archs is not None:                  # explicit wins, always
+        archs = tuple(args.archs.split(","))
+    else:
+        archs = SMOKE_ARCHS if args.smoke else tuple(ARCH_IDS)
+    shape = None
+    if args.smoke:
+        shape = ZOO_SHAPE_SMOKE
+    captures: dict | None = {} if args.measure else None
+    record = run_zoo(mesh, archs=archs, shape=shape, hw=hw,
                      backend=args.backend, search_config=search_config,
                      plan_store=store, full=args.full,
-                     min_dims=args.min_dims)
+                     min_dims=args.min_dims, captures=captures)
 
     print()
     print(format_table(record["results"]))
@@ -340,7 +417,52 @@ def main(argv: list[str] | None = None) -> dict:
     out = pathlib.Path(args.out)
     out.write_text(json.dumps(record, indent=2))
     print(f"wrote {out}")
-    if any(r["status"] != "ok" for r in record["results"]):
+
+    measure_failed = False
+    if args.measure:
+        from repro.launch.measure import format_measure_table, \
+            measure_record
+        print("\nmeasuring plan variants on the simulated "
+              f"{args.mesh} mesh ({mesh.num_devices} devices) ...",
+              flush=True)
+        mrec = measure_record(
+            record, captures or {}, repeats=args.measure_repeats,
+            warmup=args.measure_warmup,
+            plans_per_model=args.measure_plans,
+            timeout=args.measure_timeout, plan_store=store)
+        print()
+        print(format_measure_table(mrec))
+        cal = mrec["calibration"]
+        if "mean_rel_err_before" in cal:
+            print(f"\ncalibration over {cal['n_cells']} cells: mean "
+                  f"relative runtime error "
+                  f"{cal['mean_rel_err_before']:.2f} -> "
+                  f"{cal['mean_rel_err_after']:.2f}")
+        rho = mrec["spearman_mean"]
+        if rho is not None:
+            per = ", ".join(f"{m}={v['spearman']:.2f}"
+                            for m, v in mrec["per_model"].items()
+                            if v["spearman"] is not None)
+            print(f"predicted-vs-measured Spearman rank correlation: "
+                  f"{rho:.2f} ({per})")
+        mout = pathlib.Path(args.measure_out)
+        mout.write_text(json.dumps(mrec, indent=2))
+        print(f"wrote {mout}")
+        record["measured"] = mrec
+        # driver failures fail the run; "oom"/"compile_error" are
+        # legitimate feasibility outcomes and do not
+        broken = [c for c in mrec["cells"]
+                  if c["status"] in ("error", "timeout")]
+        no_ok = mrec["cells"] and not any(
+            c["status"] == "ok" for c in mrec["cells"])
+        if broken or no_ok:
+            for c in broken:
+                print(f"MEASURE FAILED {c['model']}/{c['plan_label']}: "
+                      f"{c['error'][:200]}")
+            measure_failed = True
+
+    if measure_failed or \
+            any(r["status"] != "ok" for r in record["results"]):
         raise SystemExit(1)
     return record
 

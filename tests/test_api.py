@@ -384,3 +384,93 @@ def test_analyze_artifacts_adopted():
     art = analyze(mlp, MLP_ARGS)
     s = Session(mlp, MLP_ARGS, artifacts=art)
     assert s.artifacts is art
+
+
+# --- plan.apply jit-cache keying (regression: stale per-treedef cache) ------
+
+
+class TestApplyCacheKeying:
+    """Two calls with the same argument *treedef* but different
+    shapes/dtypes must not reuse a stale jitted function — the cache key
+    covers the full shape/dtype struct."""
+
+    @pytest.fixture()
+    def small_plan(self):
+        args = ({"x": sh(8, 16), "w1": sh(16, 32), "w2": sh(32, 16)},)
+        return Session(mlp, args).partition(
+            Request(mesh=MeshSpec(("data", "model"), (1, 1)), min_dims=1,
+                    backend="greedy")), args
+
+    def test_distinct_shapes_get_distinct_entries(self, small_plan):
+        plan, _ = small_plan
+        applied = plan.apply(mlp)
+        big = ({"x": jnp.ones((8, 16)), "w1": jnp.ones((16, 32)),
+                "w2": jnp.ones((32, 16))},)
+        small = ({"x": jnp.ones((4, 16)), "w1": jnp.ones((16, 32)),
+                  "w2": jnp.ones((32, 16))},)
+        y_big = applied(*big)
+        y_small = applied(*small)
+        assert y_big.shape == (8, 16)
+        assert y_small.shape == (4, 16)       # stale cache would be (8,16)
+        assert len(applied._cache) == 2
+
+    def test_same_shapes_hit_the_cache(self, small_plan):
+        plan, _ = small_plan
+        applied = plan.apply(mlp)
+        args = ({"x": jnp.ones((8, 16)), "w1": jnp.ones((16, 32)),
+                 "w2": jnp.ones((32, 16))},)
+        applied(*args)
+        applied(*args)
+        assert len(applied._cache) == 1
+
+    def test_shape_dependent_output_structure_raises_clearly(self):
+        """A function whose output pytree depends on the input shape:
+        under the old treedef-only key the first call's out_shardings
+        were silently reused for the second shape; now the mismatch is
+        reported against the *new* shape's output structure."""
+        def shapefn(x):
+            y = x * 2.0
+            if x.shape[0] >= 8:
+                return {"a": y, "b": y.sum()}
+            return {"a": y}
+
+        plan = Session(shapefn, (sh(8, 4),)).partition(
+            Request(mesh=MeshSpec(("data", "model"), (1, 1)), min_dims=1,
+                    backend="greedy"))
+        assert len(plan.out_specs) == 2
+        applied = plan.apply(shapefn)
+        applied(jnp.ones((8, 4)))
+        with pytest.raises(ValueError, match="output specs"):
+            applied(jnp.ones((4, 4)))
+
+
+# --- Session.plan_for_state (measured-execution entry point) ----------------
+
+
+class TestPlanForState:
+    def test_root_state_is_baseline(self, sess):
+        req = fast_request()
+        plan = sess.plan_for_state(req, ShardingState(),
+                                   label="unsharded")
+        assert plan.cost == pytest.approx(1.0)
+        assert plan.backend == "unsharded"
+        assert plan.evaluations == 0
+        assert all(all(e is None for e in s) for s in plan.in_specs)
+
+    def test_reproduces_searched_plan_projection(self, sess):
+        req = fast_request(backend="greedy")
+        searched = sess.partition(req)
+        rebuilt = sess.plan_for_state(req, searched.state)
+        assert rebuilt.in_specs == searched.in_specs
+        assert rebuilt.out_specs == searched.out_specs
+        assert rebuilt.cost == pytest.approx(searched.cost)
+        assert rebuilt.fingerprint == searched.fingerprint
+
+    def test_round_trips_through_json(self, sess):
+        from repro.core.partitioner import ShardingPlan
+        req = fast_request(backend="greedy")
+        plan = sess.plan_for_state(req, sess.partition(req).state,
+                                   label="variant")
+        back = ShardingPlan.from_json(plan.to_json())
+        assert back.state == plan.state
+        assert back.backend == "variant"

@@ -24,6 +24,8 @@ DOC_GATED_FILES = [
     "src/repro/core/portfolio.py",
     "src/repro/ckpt/plan_store.py",
     "src/repro/launch/zoo.py",
+    "src/repro/core/measure.py",
+    "src/repro/launch/measure.py",
 ]
 
 RULES = "D101,D102,D103,D417"

@@ -137,3 +137,35 @@ def test_cells_skip_rules():
     assert with_long == {"mixtral_8x22b", "recurrentgemma_2b", "xlstm_350m"}
     # 33 cells total = 10 archs x 3 + 3 long_500k
     assert sum(len(cells(a)) for a in ARCH_IDS) == 33
+
+
+# --- zoo mesh-spec parsing (regression: malformed specs -> tracebacks) ------
+
+
+class TestParseMesh:
+    def test_valid_specs(self):
+        from repro.launch.zoo import parse_mesh
+        m = parse_mesh("4x2")
+        assert m.axes == ("data", "model") and m.sizes == (4, 2)
+        m3 = parse_mesh("2x4x2")
+        assert m3.axes == ("data", "seq", "model")
+        m4 = parse_mesh("2x2x2x2")
+        assert m4.dcn_axes == ("pod",)
+        assert parse_mesh("8").sizes == (8,)
+
+    @pytest.mark.parametrize("bad", ["", "4x", "x4", "axb", "4x-2",
+                                     "0x2", "2x0", "1.5x2",
+                                     "2x2x2x2x2"])
+    def test_malformed_specs_raise_value_error(self, bad):
+        from repro.launch.zoo import parse_mesh
+        with pytest.raises(ValueError, match="mesh spec"):
+            parse_mesh(bad)
+
+    def test_cli_exits_with_usage_not_traceback(self, capsys):
+        from repro.launch import zoo
+        with pytest.raises(SystemExit) as exc:
+            zoo.main(["--mesh", "4x"])
+        assert exc.value.code == 2              # argparse usage error
+        err = capsys.readouterr().err
+        assert "bad mesh spec" in err
+        assert "usage:" in err

@@ -1,0 +1,355 @@
+"""Measured-execution backend tests: calibration math, plan variants,
+hardware round-trips, with_hardware re-costing, and one real
+simulated-mesh worker run (subprocess, 2 fake devices)."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.actions import build_action_space
+from repro.core.cost_model import (CostModel, HardwareSpec, MeshSpec,
+                                   ShardingState)
+from repro.core.measure import (candidate_states, fit_hardware,
+                                linear_predict, mean_relative_error,
+                                spearman)
+from repro.core.partitioner import analyze, auto_partition
+from repro.core.search import BeamConfig
+
+
+def sh(*s):
+    return jax.ShapeDtypeStruct(s, jnp.float32)
+
+
+def mlp(x, w1, w2):
+    return jax.nn.relu(x @ w1) @ w2
+
+
+MLP_ARGS = (sh(1024, 512), sh(512, 2048), sh(2048, 512))
+MESH = MeshSpec(("data", "model"), (4, 4))
+
+
+@pytest.fixture(scope="module")
+def mlp_art():
+    return analyze(mlp, MLP_ARGS)
+
+
+@pytest.fixture(scope="module")
+def mlp_cm(mlp_art):
+    return CostModel(mlp_art.prog, mlp_art.nda, mlp_art.analysis, MESH)
+
+
+@pytest.fixture(scope="module")
+def mlp_plan(mlp_art):
+    return auto_partition(mlp, MLP_ARGS, MESH, min_dims=1,
+                          backend="beam", artifacts=mlp_art,
+                          search_config=BeamConfig(width=4, patience=1))
+
+
+class TestSpearman:
+    def test_perfect_agreement(self):
+        assert spearman([1, 2, 3, 4], [10, 20, 30, 40]) == \
+            pytest.approx(1.0)
+
+    def test_perfect_disagreement(self):
+        assert spearman([1, 2, 3], [9, 5, 1]) == pytest.approx(-1.0)
+
+    def test_monotone_nonlinear_is_1(self):
+        xs = [1.0, 2.0, 5.0, 100.0]
+        assert spearman(xs, [x ** 3 for x in xs]) == pytest.approx(1.0)
+
+    def test_ties_average(self):
+        r = spearman([1, 1, 2], [1, 2, 3])
+        assert -1.0 < r < 1.0
+
+    def test_degenerate_inputs(self):
+        assert spearman([], []) == 0.0
+        assert spearman([1.0], [2.0]) == 0.0
+        assert spearman([3, 3, 3], [1, 2, 3]) == 0.0
+
+    def test_length_mismatch_raises(self):
+        with pytest.raises(ValueError, match="length"):
+            spearman([1, 2], [1])
+
+
+class TestHardwareSpecRoundTrip:
+    def test_json_round_trip(self):
+        hw = HardwareSpec(flops_per_chip=5e10, hbm_bw=2e10,
+                          coll_latency=3e-6,
+                          axis_bw=(("data", 1e9), ("model", 2e9)))
+        back = HardwareSpec.from_dict(json.loads(json.dumps(hw.as_dict())))
+        assert back == hw
+
+    def test_axis_bw_spellings_normalize(self):
+        a = HardwareSpec(axis_bw={"model": 1e9, "data": 2e9})
+        b = HardwareSpec(axis_bw=[["data", 2e9], ["model", 1e9]])
+        assert a == b
+        assert a.axis_bw == (("data", 2e9), ("model", 1e9))
+
+    def test_from_dict_ignores_unknown_and_missing(self):
+        hw = HardwareSpec.from_dict({"flops_per_chip": 1e12,
+                                     "not_a_field": 7})
+        assert hw.flops_per_chip == 1e12
+        assert hw.hbm_bw == HardwareSpec().hbm_bw
+
+
+class TestMeshSpecValidation:
+    def test_unknown_axis_names_valid_ones(self):
+        m = MeshSpec(("data", "model"), (2, 4))
+        with pytest.raises(ValueError, match="valid axes.*data.*model"):
+            m.size("modle")
+
+    def test_size_ok(self):
+        assert MeshSpec(("data", "model"), (2, 4)).size("model") == 4
+
+    @pytest.mark.parametrize("axes,sizes", [
+        (("data",), (0,)),
+        (("data",), (-2,)),
+        (("data", "model"), (2,)),
+        (("data", "data"), (2, 2)),
+    ])
+    def test_malformed_mesh_raises(self, axes, sizes):
+        with pytest.raises(ValueError):
+            MeshSpec(axes, sizes)
+
+    def test_unknown_dcn_axis_raises(self):
+        with pytest.raises(ValueError, match="dcn_axes"):
+            MeshSpec(("data",), (2,), dcn_axes=("pod",))
+
+    def test_state_with_unknown_axis_fails_clearly(self, mlp_cm):
+        state = ShardingState(((0, ("modle",)),), ())
+        with pytest.raises(ValueError, match="unknown mesh axis 'modle'"):
+            mlp_cm.evaluate_dense(state)
+
+
+class TestWithHardware:
+    HW2 = HardwareSpec(flops_per_chip=5e10, hbm_bw=2e10, ici_bw=1e9,
+                       coll_latency=2e-6, axis_bw=(("model", 5e8),))
+
+    def test_matches_fresh_model(self, mlp_art, mlp_cm, mlp_plan):
+        fast = mlp_cm.with_hardware(self.HW2)
+        fresh = CostModel(mlp_art.prog, mlp_art.nda, mlp_art.analysis,
+                          MESH, self.HW2)
+        for state in (ShardingState(), mlp_plan.state):
+            a = fast.evaluate(state).as_dict()
+            b = fresh.evaluate(state).as_dict()
+            for k in a:
+                assert a[k] == pytest.approx(b[k], rel=1e-12), k
+
+    def test_does_not_mutate_original(self, mlp_cm, mlp_plan):
+        before = mlp_cm.evaluate(mlp_plan.state).as_dict()
+        mlp_cm.with_hardware(self.HW2).evaluate(mlp_plan.state)
+        assert mlp_cm.evaluate(mlp_plan.state).as_dict() == before
+
+    def test_latency_and_axis_bw_change_collective_time(self, mlp_cm,
+                                                        mlp_plan):
+        bd0 = mlp_cm.evaluate(mlp_plan.state)
+        bd1 = mlp_cm.with_hardware(self.HW2).evaluate(mlp_plan.state)
+        if bd0.comm_bytes > 0:
+            assert bd1.collective_time > bd0.collective_time
+
+
+class TestStateFeatures:
+    def test_hardware_independent_work_terms(self, mlp_cm, mlp_plan):
+        f0 = mlp_cm.state_features(mlp_plan.state)
+        f1 = mlp_cm.with_hardware(TestWithHardware.HW2) \
+            .state_features(mlp_plan.state)
+        assert f0["flops"] == f1["flops"]
+        assert f0["hbm_bytes"] == pytest.approx(f1["hbm_bytes"])
+        assert f0["coll_bytes"] == pytest.approx(f1["coll_bytes"])
+        assert f0["coll_count"] == f1["coll_count"]
+
+    def test_collective_time_reconstructs_from_features(self, mlp_cm,
+                                                        mlp_plan):
+        """Σ_a eff_bytes[a]/bw_a + count·latency == breakdown collective
+        time — the identity the calibration fit relies on."""
+        hw = TestWithHardware.HW2
+        cm = mlp_cm.with_hardware(hw)
+        f = cm.state_features(mlp_plan.state)
+        bw = dict(hw.axis_bw)
+        t = sum(b / bw.get(a, hw.ici_bw)
+                for a, b in f["coll_bytes"].items())
+        t += f["coll_count"] * hw.coll_latency
+        bd = cm.evaluate(mlp_plan.state)
+        assert t == pytest.approx(bd.collective_time, rel=1e-9)
+
+    def test_unsharded_has_no_collectives(self, mlp_cm):
+        f = mlp_cm.state_features(ShardingState())
+        assert f["coll_count"] == 0
+        assert f["coll_bytes"] == {}
+
+
+class TestCandidateStates:
+    def test_contains_root_and_best_distinct(self, mlp_plan):
+        cands = candidate_states(mlp_plan.state, k=4)
+        labels = [label for label, _ in cands]
+        assert labels[0] == "unsharded"
+        assert "best" in labels
+        states = [s for _, s in cands]
+        assert len(set(states)) == len(states)        # all distinct
+
+    def test_worst1_anchor_uses_cost_fn(self, mlp_art, mlp_cm, mlp_plan):
+        actions = build_action_space(mlp_art.nda, mlp_art.analysis, MESH,
+                                     min_dims=1)
+        cands = candidate_states(mlp_plan.state, actions=actions,
+                                 cost_fn=mlp_cm.paper_cost, k=5)
+        by_label = dict(cands)
+        assert "worst1" in by_label
+        worst = by_label["worst1"]
+        assert len(worst.color_axes) == 1             # one action deep
+        costs = {label: mlp_cm.paper_cost(s) for label, s in cands}
+        assert costs["worst1"] >= max(
+            mlp_cm.paper_cost(a.apply(ShardingState()))
+            for a in actions) - 1e-12
+
+    def test_empty_best_state_still_yields_variants(self):
+        cands = candidate_states(ShardingState(), k=4)
+        assert cands == [("unsharded", ShardingState())]
+
+
+def _synthetic_cells(hw_true, n=12, seed=0):
+    import numpy as np
+    rng = np.random.RandomState(seed)
+    cells = []
+    for _ in range(n):
+        f = {
+            "flops": float(rng.uniform(1e8, 5e9)),
+            "hbm_bytes": float(rng.uniform(1e7, 5e8)),
+            "coll_bytes": {"data": float(rng.uniform(0, 2e7)),
+                           "model": float(rng.uniform(0, 4e7))},
+            "coll_count": float(rng.randint(0, 200)),
+        }
+        cells.append({"features": f,
+                      "measured_s": linear_predict(f, hw_true)})
+    return cells
+
+
+class TestFitHardware:
+    HW_TRUE = HardwareSpec(flops_per_chip=4e10, hbm_bw=8e9,
+                           coll_latency=5e-6,
+                           axis_bw=(("data", 2e9), ("model", 5e8)))
+
+    def test_recovers_synthetic_coefficients(self):
+        cells = _synthetic_cells(self.HW_TRUE)
+        fit = fit_hardware(cells, HardwareSpec(), ("data", "model"))
+        assert fit.flops_per_chip == pytest.approx(4e10, rel=1e-6)
+        assert fit.hbm_bw == pytest.approx(8e9, rel=1e-6)
+        assert fit.coll_latency == pytest.approx(5e-6, rel=1e-6)
+        assert dict(fit.axis_bw)["data"] == pytest.approx(2e9, rel=1e-6)
+        assert dict(fit.axis_bw)["model"] == pytest.approx(5e8, rel=1e-6)
+
+    def test_reduces_prediction_error(self):
+        cells = _synthetic_cells(self.HW_TRUE, n=20, seed=1)
+        hw0 = HardwareSpec()            # TPU constants: wildly optimistic
+        fit = fit_hardware(cells, hw0, ("data", "model"))
+        meas = [c["measured_s"] for c in cells]
+        before = mean_relative_error(
+            [linear_predict(c["features"], hw0) for c in cells], meas)
+        after = mean_relative_error(
+            [linear_predict(c["features"], fit) for c in cells], meas)
+        assert after < before
+        assert after < 0.01
+
+    def test_noisy_fit_stays_nonnegative(self):
+        import numpy as np
+        rng = np.random.RandomState(7)
+        cells = _synthetic_cells(self.HW_TRUE, n=30, seed=2)
+        for c in cells:
+            c["measured_s"] *= float(rng.uniform(0.8, 1.2))
+        fit = fit_hardware(cells, HardwareSpec(), ("data", "model"))
+        assert fit.flops_per_chip > 0
+        assert fit.hbm_bw > 0
+        assert fit.coll_latency >= 0
+        assert all(bw > 0 for _, bw in fit.axis_bw)
+
+    def test_empty_cells_raise(self):
+        with pytest.raises(ValueError, match="zero measured"):
+            fit_hardware([], HardwareSpec(), ("data",))
+
+    def test_dropped_latency_keeps_hw0_value(self):
+        """Cells with zero collectives cannot fit latency or axis
+        bandwidths — those coefficients keep their hw0 values instead of
+        silently resetting to 0 / ici defaults."""
+        hw0 = HardwareSpec(coll_latency=7e-6,
+                           axis_bw=(("data", 3e9), ("model", 3e9)))
+        cells = []
+        for flops in (1e9, 2e9, 5e9):
+            f = {"flops": flops, "hbm_bytes": flops / 4.0,
+                 "coll_bytes": {}, "coll_count": 0.0}
+            cells.append({"features": f,
+                          "measured_s": linear_predict(f, hw0)})
+        fit = fit_hardware(cells, hw0, ("data", "model"))
+        assert fit.coll_latency == hw0.coll_latency
+        assert dict(fit.axis_bw)["data"] == hw0.ici_bw
+
+
+class TestMeanRelativeError:
+    def test_basic(self):
+        assert mean_relative_error([2.0], [1.0]) == pytest.approx(1.0)
+        assert mean_relative_error([1.0, 2.0], [1.0, 2.0]) == 0.0
+
+    def test_zero_measured_skipped(self):
+        assert mean_relative_error([1.0, 5.0], [0.0, 5.0]) == 0.0
+
+
+class TestPlanKeyStability:
+    """New HardwareSpec fields at their defaults must not move existing
+    plan-store keys (stores written before the calibration fields stay
+    warm); calibrated values must key distinctly."""
+
+    def test_default_new_fields_do_not_change_keys(self):
+        from repro.ckpt.plan_store import plan_key, plan_key_v2
+        base = HardwareSpec()
+        explicit = HardwareSpec(coll_latency=0.0, axis_bw=())
+        assert plan_key_v2("a" * 64, MESH, base) == \
+            plan_key_v2("a" * 64, MESH, explicit)
+        assert plan_key("a" * 64, MESH, base) == \
+            plan_key("a" * 64, MESH, explicit)
+
+    def test_calibrated_fields_key_distinctly(self):
+        from repro.ckpt.plan_store import plan_key_v2
+        base = plan_key_v2("a" * 64, MESH, HardwareSpec())
+        assert plan_key_v2("a" * 64, MESH,
+                           HardwareSpec(coll_latency=1e-6)) != base
+        assert plan_key_v2("a" * 64, MESH,
+                           HardwareSpec(axis_bw=(("data", 1e9),))) != base
+
+
+class TestMeasureWorker:
+    """One real measurement: search a tiny plan, execute it in a
+    subprocess on a 2-device simulated mesh, check the result record."""
+
+    @pytest.mark.slow
+    def test_end_to_end(self):
+        from repro.api import Request, Session
+        from repro.configs import get_config
+        from repro.configs.base import ShapeConfig
+        from repro.launch.measure import measure_plan
+        from repro.launch.specs import step_and_inputs
+
+        cfg = get_config("qwen2_05b").reduced()
+        shape = ShapeConfig("measure_test", 32, 4, "train")
+        fn, args, names = step_and_inputs(cfg, shape)
+        sess = Session(fn, args)
+        mesh = MeshSpec(("data", "model"), (1, 2))
+        req = Request(mesh=mesh, backend="greedy",
+                      search_config=BeamConfig(max_depth=3, patience=1),
+                      logical_axes=names)
+        plan = sess.partition(req)
+        res = measure_plan("qwen2_05b", shape, plan, repeats=2, warmup=1,
+                           timeout=600)
+        assert res["status"] == "ok", res
+        assert res["devices"] == 2
+        assert res["measured_s"] > 0
+        assert len(res["runs_s"]) == 2
+        assert res["peak_bytes"] > 0
+
+        # plan_for_state variants are runnable too: the unsharded root
+        root_plan = sess.plan_for_state(req, ShardingState(),
+                                        label="unsharded")
+        assert root_plan.cost == pytest.approx(1.0)
+        assert root_plan.backend == "unsharded"
+        res0 = measure_plan("qwen2_05b", shape, root_plan, repeats=1,
+                            warmup=1, timeout=600)
+        assert res0["status"] == "ok", res0

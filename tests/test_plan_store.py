@@ -334,3 +334,144 @@ class TestKeySchemaV2:
         with_cons = dict(params, constraints=(Replicate("['x']"),))
         assert store.get(plan.fingerprint, plan.mesh,
                          params=with_cons) is None
+
+
+# --- atomic-write audit: stale temps, concurrent writers --------------------
+
+
+class TestTempFileHygiene:
+    def test_stale_tmps_removed_on_open(self, tmp_path):
+        tmp_path.mkdir(exist_ok=True)
+        stale = tmp_path / "put-999-abc.tmp"
+        stale.write_text("{truncated")
+        old = 1_000_000.0                       # 1970-ish mtime
+        os.utime(stale, (old, old))
+        fresh = tmp_path / "put-998-def.tmp"
+        fresh.write_text("{live writer}")
+        PlanStore(tmp_path)                     # default 1h threshold
+        assert not stale.exists()               # crash leftover removed
+        assert fresh.exists()                   # live writer untouched
+
+    def test_threshold_zero_removes_everything(self, tmp_path):
+        tmp_path.mkdir(exist_ok=True)
+        t = tmp_path / "put-1-x.tmp"
+        t.write_text("x")
+        os.utime(t, (1_000_000.0, 1_000_000.0))
+        PlanStore(tmp_path, stale_tmp_seconds=0)
+        assert not t.exists()
+
+    def test_hardware_subdir_tmps_swept_too(self, tmp_path):
+        hw_dir = tmp_path / "hardware"
+        hw_dir.mkdir(parents=True)
+        stale = hw_dir / "put-7-y.tmp"
+        stale.write_text("{torn")
+        os.utime(stale, (1_000_000.0, 1_000_000.0))
+        PlanStore(tmp_path)
+        assert not stale.exists()
+
+    def test_put_failure_leaves_no_tmp(self, mlp_plan, tmp_path,
+                                       monkeypatch):
+        import json as _json
+        plan = ShardingPlan.from_json(mlp_plan.to_json())
+        plan.fingerprint = "f" * 64
+        store = PlanStore(tmp_path)
+
+        def boom(*a, **k):
+            raise RuntimeError("disk full")
+
+        monkeypatch.setattr(_json, "dump", boom)
+        with pytest.raises(RuntimeError):
+            store.put(plan)
+        assert list(tmp_path.glob("*.tmp")) == []
+        assert len(store) == 0
+
+    def test_two_concurrent_writers_commit_valid_entries(self, mlp_plan,
+                                                         tmp_path):
+        """Two zoo workers hammering one key: every committed entry must
+        be complete valid JSON (atomic rename), readers never observe a
+        torn write, and no temp files survive."""
+        import json as _json
+        import threading
+
+        plan = ShardingPlan.from_json(mlp_plan.to_json())
+        plan.fingerprint = "a1" * 32
+        params = {"min_dims": 1}
+        errors = []
+
+        def writer():
+            store = PlanStore(tmp_path)
+            try:
+                for _ in range(25):
+                    store.put(plan, params=params)
+            except Exception as e:              # noqa: BLE001
+                errors.append(e)
+
+        def reader():
+            store = PlanStore(tmp_path)
+            try:
+                for _ in range(50):
+                    got = store.get(plan.fingerprint, plan.mesh,
+                                    params=params)
+                    if got is not None:
+                        assert got.state == plan.state
+            except Exception as e:              # noqa: BLE001
+                errors.append(e)
+
+        threads = [threading.Thread(target=writer) for _ in range(2)]
+        threads.append(threading.Thread(target=reader))
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert errors == []
+        assert list(tmp_path.glob("*.tmp")) == []
+        entries = list(tmp_path.glob("*.json"))
+        assert len(entries) == 1                # one key, one entry
+        _json.loads(entries[0].read_text())     # complete valid JSON
+        store = PlanStore(tmp_path)
+        assert store.get(plan.fingerprint, plan.mesh,
+                         params=params) is not None
+
+
+# --- calibrated-hardware round-trip -----------------------------------------
+
+
+class TestHardwareRoundTrip:
+    def test_save_load(self, tmp_path):
+        store = PlanStore(tmp_path)
+        hw = HardwareSpec(flops_per_chip=5e10, hbm_bw=2e10,
+                          coll_latency=4e-6,
+                          axis_bw=(("data", 1e9), ("model", 2e9)))
+        store.save_hardware(hw)
+        assert PlanStore(tmp_path).load_hardware() == hw
+
+    def test_missing_is_none(self, tmp_path):
+        assert PlanStore(tmp_path).load_hardware() is None
+        assert PlanStore(tmp_path).load_hardware("nope") is None
+
+    def test_corrupt_is_none(self, tmp_path):
+        store = PlanStore(tmp_path)
+        store.save_hardware(HardwareSpec())
+        store._hw_path("calibrated").write_text("{not json")
+        assert store.load_hardware() is None
+
+    def test_named_specs_coexist(self, tmp_path):
+        store = PlanStore(tmp_path)
+        a = HardwareSpec(coll_latency=1e-6)
+        b = HardwareSpec(coll_latency=2e-6)
+        store.save_hardware(a, "cpu")
+        store.save_hardware(b, "tpu")
+        assert store.load_hardware("cpu") == a
+        assert store.load_hardware("tpu") == b
+
+    def test_hardware_files_not_counted_as_entries(self, mlp_plan,
+                                                   tmp_path):
+        store = PlanStore(tmp_path)
+        store.save_hardware(HardwareSpec())
+        assert len(store) == 0                  # plans only
+        plan = ShardingPlan.from_json(mlp_plan.to_json())
+        plan.fingerprint = "b2" * 32
+        store.put(plan)
+        assert len(store) == 1
+        store.clear()
+        assert store.load_hardware() is not None   # clear() spares hw

@@ -134,6 +134,58 @@ class TestPortfolioBackend:
         assert len(members) == 4            # 2 mcts + beam + greedy
         assert {m.backend for m in members} == {"mcts", "beam", "greedy"}
 
+    def test_cancelled_members_never_write_partial_results(
+            self, search_inputs):
+        """A cancelled member must leave no trace beyond its 'cancelled'
+        outcome: zero evaluations/seconds, no cost, and the winner is
+        always a completed member."""
+        cm, actions = search_inputs
+        same = BeamConfig(width=1, max_depth=6, patience=1)
+        members = tuple(PortfolioMember("greedy", seed=i, config=same,
+                                        label=f"g{i}") for i in range(8))
+        cfg = PortfolioConfig(members=members, max_workers=1, patience=1)
+        res = PortfolioBackend().search(IncrementalEvaluator(cm), actions,
+                                        cfg)
+        cancelled = [m for m in res.members if m.status == "cancelled"]
+        assert cancelled                      # early stop really fired
+        for m in cancelled:
+            assert m.evaluations == 0
+            assert m.seconds == 0.0
+            assert m.best_cost == float("inf")
+            assert not m.feasible
+            assert m.error == ""
+        done = {m.label for m in res.members if m.status == "done"}
+        assert res.winner in done
+        # totals only count completed members
+        assert res.evaluations == sum(m.evaluations for m in res.members
+                                      if m.status == "done")
+
+    def test_best_plan_deterministic_across_worker_counts(
+            self, search_inputs):
+        """With fixed seeds and no plateau cutoff, the returned best
+        plan is identical whether members run sequentially or on four
+        threads (deterministic tie-breaks by portfolio order)."""
+        cm, actions = search_inputs
+        members = (
+            PortfolioMember("greedy", config=BeamConfig(patience=1)),
+            PortfolioMember("beam", config=BeamConfig(width=2,
+                                                      patience=1)),
+            PortfolioMember("mcts", seed=0,
+                            config=MCTSConfig(seed=0, rounds=2,
+                                              trajectories_per_round=8)),
+            PortfolioMember("mcts", seed=1,
+                            config=MCTSConfig(seed=1, rounds=2,
+                                              trajectories_per_round=8)),
+        )
+        outcomes = []
+        for workers in (1, 4):
+            cfg = PortfolioConfig(members=members, max_workers=workers,
+                                  patience=100)
+            res = PortfolioBackend().search(IncrementalEvaluator(cm),
+                                            actions, cfg)
+            outcomes.append((res.best_state, res.best_cost, res.winner))
+        assert outcomes[0] == outcomes[1]
+
 
 class TestAutoPartitionPortfolio:
     def test_backend_name_and_stats(self, mlp_art):
