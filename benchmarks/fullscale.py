@@ -1,0 +1,315 @@
+"""Full-scale pipeline benchmark: production configs, thousand-op programs.
+
+Everything else in ``benchmarks/`` runs reduced configs; this section runs
+the *real* ``llama3_405b`` and ``mixtral_8x22b`` programs (4k sequence,
+global batch 256) on an 8x4 mesh and measures, per model:
+
+- **analysis**: per-phase wall time (trace / NDA / conflicts), plus a true
+  before-vs-after for conflict detection — the vectorized
+  ``find_conflicts`` against the per-op reference walk it replaced
+  (``find_conflicts_reference``), which must also agree bit-identically.
+- **evals**: cost evaluations/sec of the dense seed path
+  (``CostModel.evaluate_dense`` — the pre-incremental "before") vs the
+  batched incremental engine on identical seeded random action walks.
+- **search**: a real MCTS run on the incremental engine, with the
+  dense-path wall time the same number of evaluations would have cost
+  ("before") next to the measured wall time ("after").
+
+The **exactness oracle** re-runs both conflict-detection implementations
+over every reduced zoo config and compares bit-for-bit (conflict ids,
+group pairs, colors, witness sites and dim positions) — the acceptance
+gate for the vectorized analysis.
+
+Emits the repo's ``name,us_per_call,derived`` CSV rows and writes
+``BENCH_fullscale.json``.  ``--smoke`` is the time-boxed CI mode: trace +
+analyze one full config (no search), run the oracle, and fail on any
+mismatch or on a >2x analysis-time regression against the checked-in
+``benchmarks/fullscale_baseline.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import random
+import time
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core.actions import build_action_space, valid_actions
+from repro.core.conflicts import find_conflicts, find_conflicts_reference
+from repro.core.cost_model import (CostModel, HardwareSpec, MeshSpec,
+                                   ShardingState)
+from repro.core.evaluator import IncrementalEvaluator
+from repro.core.mcts import MCTS, MCTSConfig
+from repro.core.nda import run_nda
+from repro.core.partitioner import analyze
+from repro.launch.specs import step_and_inputs
+from repro.launch.zoo import ZOO_SHAPE_FULL, parse_mesh
+
+FULL_MODELS = ("llama3_405b", "mixtral_8x22b")
+BASELINE_PATH = pathlib.Path(__file__).parent / "fullscale_baseline.json"
+
+
+def _row(name, us, derived=""):
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def _conflict_fingerprint(conflicts) -> list:
+    """Canonical, order-sensitive encoding of a conflict list — two
+    implementations agree bit-identically iff these are equal."""
+    out = []
+    for c in conflicts:
+        out.append((c.cid, c.group_a, c.group_b, c.color, tuple(
+            (w.site.kind, w.site.op_index, w.site.slot, w.site.value,
+             w.dim_a, w.dim_b) for w in c.witnesses)))
+    return out
+
+
+def oracle_check(archs=ARCH_IDS, verbose: bool = True) -> dict:
+    """Exactness oracle: vectorized vs reference conflict detection over
+    every reduced zoo config.
+
+    Args:
+        archs: config names to check (default: the whole zoo, reduced).
+        verbose: print a CSV row per config.
+
+    Returns:
+        ``{"configs": n, "mismatches": [names]}`` — an empty mismatch
+        list is the acceptance gate.
+    """
+    from repro.launch.zoo import ZOO_SHAPE
+    from repro.core.ir import extract_program
+    mismatches = []
+    for arch in archs:
+        cfg = get_config(arch).reduced()
+        fn, args, _ = step_and_inputs(cfg, ZOO_SHAPE)
+        prog = extract_program(fn, *args)
+        nda = run_nda(prog)
+        t0 = time.perf_counter()
+        vec = find_conflicts(nda)
+        t_vec = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        ref = find_conflicts_reference(nda)
+        t_ref = time.perf_counter() - t0
+        ok = _conflict_fingerprint(vec) == _conflict_fingerprint(ref)
+        if not ok:
+            mismatches.append(arch)
+        if verbose:
+            _row(f"fullscale.oracle.{arch}", t_vec * 1e6,
+                 f"match={int(ok)};conflicts={len(vec)};"
+                 f"ref_us={t_ref * 1e6:.1f}")
+    return {"configs": len(tuple(archs)), "mismatches": mismatches}
+
+
+def bench_model(name: str, mesh: MeshSpec, hw: HardwareSpec, *,
+                n_walks: int = 40, depth: int = 12,
+                dense_sample: int = 25, seed: int = 0,
+                mcts_cfg: MCTSConfig | None = None,
+                search: bool = True) -> dict:
+    """Trace, analyze, and (optionally) search one production config.
+
+    Args:
+        name: config name (production size — never ``reduced()``).
+        mesh: mesh to shard over.
+        hw: hardware roofline constants.
+        n_walks: seeded random action walks for the throughput measure.
+        depth: actions per walk.
+        dense_sample: states re-costed on the dense seed path.
+        seed: RNG seed for the walks.
+        mcts_cfg: search budget (default: a small real MCTS run).
+        search: skip the search phase entirely when False (smoke mode).
+
+    Returns:
+        The per-model record written into ``BENCH_fullscale.json``.
+    """
+    cfg = get_config(name)
+    fn, args, _ = step_and_inputs(cfg, ZOO_SHAPE_FULL)
+    t0 = time.perf_counter()
+    art = analyze(fn, args, {})
+    analysis_s = time.perf_counter() - t0
+
+    # before-vs-after on the full program: reference conflict walk vs the
+    # vectorized detection actually used (also asserted bit-identical)
+    t0 = time.perf_counter()
+    vec = find_conflicts(art.nda)
+    conflicts_vec_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    ref = find_conflicts_reference(art.nda)
+    conflicts_ref_s = time.perf_counter() - t0
+    conflicts_match = (_conflict_fingerprint(vec) ==
+                       _conflict_fingerprint(ref))
+
+    t0 = time.perf_counter()
+    cm = CostModel(art.prog, art.nda, art.analysis, mesh, hw)
+    cm_build_s = time.perf_counter() - t0
+
+    rec = {
+        "model": name,
+        "params_m_full": round(cfg.num_params() / 1e6, 2),
+        "ops": len(art.prog.ops),
+        "colors": len(art.nda.color_summary()),
+        "conflicts": len(art.analysis.conflicts),
+        "resolution_bits": art.analysis.num_resolution_bits,
+        "analysis_s": round(analysis_s, 4),
+        "analysis_phases": {k: round(v, 4)
+                            for k, v in art.phase_seconds.items()},
+        "cost_model_build_s": round(cm_build_s, 4),
+        "conflicts_vectorized_s": round(conflicts_vec_s, 5),
+        "conflicts_reference_s": round(conflicts_ref_s, 5),
+        "conflicts_match": conflicts_match,
+    }
+    _row(f"fullscale.analysis.{name}", analysis_s * 1e6,
+         f"ops={rec['ops']};" + ";".join(
+             f"{k}_s={v:.3f}" for k, v in rec["analysis_phases"].items()))
+    _row(f"fullscale.conflicts.{name}", conflicts_vec_s * 1e6,
+         f"ref_us={conflicts_ref_s * 1e6:.1f};"
+         f"match={int(conflicts_match)}")
+    if not search:
+        return rec
+
+    actions = build_action_space(art.nda, art.analysis, mesh, min_dims=10)
+    rng = random.Random(seed)
+    walks = []
+    for _ in range(n_walks):
+        s = ShardingState()
+        walk = []
+        for _ in range(depth):
+            av = valid_actions(actions, s)
+            if not av:
+                break
+            a = rng.choice(av)
+            child = a.apply(s)
+            walk.append((s, a, child))
+            s = child
+        walks.append(walk)
+    states = [c for walk in walks for _, _, c in walk]
+
+    ev = IncrementalEvaluator(cm)
+    t0 = time.perf_counter()
+    for walk in walks:
+        for parent, a, _ in walk:
+            ev.paper_cost_child(parent, a)
+    inc_eps = len(states) / max(time.perf_counter() - t0, 1e-12)
+
+    sample = states[:dense_sample]
+    t0 = time.perf_counter()
+    for s in sample:
+        cm.cost_from_breakdown(cm.evaluate_dense(s))
+    dense_eps = len(sample) / max(time.perf_counter() - t0, 1e-12)
+
+    cfg_mcts = mcts_cfg or MCTSConfig(rounds=4, trajectories_per_round=16)
+    ev2 = IncrementalEvaluator(cm)
+    agent = MCTS(ev2, actions, cfg_mcts)
+    t0 = time.perf_counter()
+    res = agent.search()
+    search_s = time.perf_counter() - t0
+    # what the same evaluation count would have cost on the dense path
+    search_s_dense_est = res.evaluations / max(dense_eps, 1e-12)
+
+    rec.update(
+        actions=len(actions),
+        walk_states=len(states),
+        dense_evals_per_s=round(dense_eps, 2),
+        incremental_evals_per_s=round(inc_eps, 2),
+        evals_speedup=round(inc_eps / max(dense_eps, 1e-12), 2),
+        search_s=round(search_s, 3),
+        search_s_dense_est=round(search_s_dense_est, 3),
+        search_evaluations=res.evaluations,
+        search_best_cost=round(res.best_cost, 6),
+        eval_stats=ev2.stats.as_dict(),
+    )
+    _row(f"fullscale.dense_eval.{name}", 1e6 / max(dense_eps, 1e-12),
+         f"evals_per_s={dense_eps:.1f}")
+    _row(f"fullscale.incremental_eval.{name}",
+         1e6 / max(inc_eps, 1e-12),
+         f"evals_per_s={inc_eps:.1f};"
+         f"speedup={rec['evals_speedup']:.1f}x")
+    _row(f"fullscale.search.{name}", search_s * 1e6,
+         f"dense_est_s={search_s_dense_est:.1f};"
+         f"best_cost={res.best_cost:.4f};evals={res.evaluations}")
+    return rec
+
+
+def run(out: str | None = "BENCH_fullscale.json", mesh: str = "8x4",
+        models=FULL_MODELS, smoke: bool = False) -> dict:
+    """Run the fullscale section (or its CI smoke subset).
+
+    Args:
+        out: JSON output path (None: don't write).
+        mesh: mesh spec string, e.g. "8x4".
+        models: production configs to run.
+        smoke: trace + analyze the first model only, no search; enforce
+            the oracle and the 2x analysis-time baseline gate.
+
+    Returns:
+        The record written to ``out``.
+
+    Raises:
+        SystemExit: in smoke mode, on oracle mismatch or analysis-time
+            regression beyond 2x the checked-in baseline.
+    """
+    m = parse_mesh(mesh)
+    hw = HardwareSpec()
+    if smoke:
+        models = models[:1]
+    rows = [bench_model(name, m, hw, search=not smoke)
+            for name in models]
+    oracle = oracle_check()
+    record = {
+        "mesh": m.as_dict(),
+        "shape": {"seq_len": ZOO_SHAPE_FULL.seq_len,
+                  "global_batch": ZOO_SHAPE_FULL.global_batch},
+        "smoke": smoke,
+        "models": rows,
+        "oracle": oracle,
+    }
+    if out:
+        pathlib.Path(out).write_text(json.dumps(record, indent=2))
+    failures = []
+    if oracle["mismatches"]:
+        failures.append(f"oracle mismatches: {oracle['mismatches']}")
+    for r in rows:
+        if not r["conflicts_match"]:
+            failures.append(f"{r['model']}: full-program conflict "
+                            "detection differs from reference")
+    if smoke and BASELINE_PATH.exists():
+        base = json.loads(BASELINE_PATH.read_text())
+        for r in rows:
+            limit = base.get(r["model"], {}).get("analysis_s")
+            if limit is not None and r["analysis_s"] > 2.0 * limit:
+                failures.append(
+                    f"{r['model']}: analysis took {r['analysis_s']:.2f}s"
+                    f" > 2x baseline {limit:.2f}s")
+    if failures:
+        for f in failures:
+            print(f"FULLSCALE FAILED: {f}", flush=True)
+        raise SystemExit(1)
+    return record
+
+
+def main(argv: list[str] | None = None) -> dict:
+    """CLI entry point (``python -m benchmarks.fullscale``).
+
+    Args:
+        argv: argument list (defaults to ``sys.argv[1:]``).
+
+    Returns:
+        The :func:`run` record.
+    """
+    ap = argparse.ArgumentParser(
+        description="Full-scale trace/analyze/search benchmark.")
+    ap.add_argument("--mesh", default="8x4")
+    ap.add_argument("--models", default=",".join(FULL_MODELS))
+    ap.add_argument("--out", default="BENCH_fullscale.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: analyze one config, no search, "
+                         "enforce oracle + 2x analysis-time baseline")
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    return run(out=args.out, mesh=args.mesh,
+               models=tuple(args.models.split(",")), smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

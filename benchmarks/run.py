@@ -19,6 +19,10 @@ Sections:
 - measure: measured execution of plan variants on a simulated device
           mesh + cost-model calibration (writes BENCH_measured.json) —
           the predict→measure→calibrate loop of docs/measure.md.
+- fullscale: production llama3_405b / mixtral_8x22b programs on an 8x4
+          mesh — per-phase analysis time, dense vs incremental
+          evals/sec, real search, vectorized-analysis exactness oracle
+          (writes BENCH_fullscale.json); opt-in, minutes of wall time.
 - kernels: Pallas kernel microbenchmarks (interpret mode) vs jnp oracle.
 """
 
@@ -179,7 +183,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--section", default="all",
                     choices=["all", "fig8", "fig10", "nda", "search",
-                             "zoo", "measure", "kernels"])
+                             "zoo", "measure", "fullscale", "kernels"])
     ap.add_argument("--models", default=",".join(MODELS))
     ap.add_argument("--search-out", default="BENCH_search.json")
     ap.add_argument("--zoo-out", default="BENCH_zoo.json")
@@ -189,6 +193,12 @@ def main() -> None:
     ap.add_argument("--measure-out", default="BENCH_measured.json")
     ap.add_argument("--measure-mesh", default="2x2",
                     help="simulated mesh for the measure section")
+    ap.add_argument("--fullscale-out", default="BENCH_fullscale.json")
+    ap.add_argument("--fullscale-mesh", default="8x4",
+                    help="mesh for the fullscale section")
+    ap.add_argument("--fullscale-smoke", action="store_true",
+                    help="fullscale CI mode: analyze one config, no "
+                         "search, enforce oracle + baseline gates")
     args = ap.parse_args()
     models = tuple(args.models.split(","))
     print("name,us_per_call,derived")
@@ -207,6 +217,10 @@ def main() -> None:
     if args.section == "measure":       # opt-in: executes real programs
         measure_sweep(out=args.measure_out, mesh=args.measure_mesh,
                       plan_store=args.zoo_plan_store or None)
+    if args.section == "fullscale":     # opt-in: production-size configs
+        from benchmarks import fullscale
+        fullscale.run(out=args.fullscale_out, mesh=args.fullscale_mesh,
+                      smoke=args.fullscale_smoke)
     if args.section in ("all", "kernels"):
         kernel_micro()
 

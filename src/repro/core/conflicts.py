@@ -30,6 +30,8 @@ from __future__ import annotations
 import dataclasses
 from collections import defaultdict
 
+import numpy as np
+
 from repro.core.nda import NDAResult, Site, UnionFind
 
 
@@ -93,7 +95,36 @@ class ConflictAnalysis:
         return chosen - (suppressed - chosen)
 
 
-def find_conflicts(res: NDAResult) -> list[Conflict]:
+def _site_conflicts(res: NDAResult, site: Site, colors, groups,
+                    by_pair: dict[tuple[int, int], Conflict]) -> None:
+    """Record the conflicts witnessed by one site into ``by_pair``."""
+    by_color: dict[int, list[int]] = defaultdict(list)
+    for i, n in enumerate(site.dims):
+        by_color[int(colors[n])].append(i)
+    for color, idxs in by_color.items():
+        if len(idxs) < 2:
+            continue
+        for a_pos in range(len(idxs)):
+            for b_pos in range(a_pos + 1, len(idxs)):
+                i, j = idxs[a_pos], idxs[b_pos]
+                ga, gb = int(groups[site.dims[i]]), int(groups[site.dims[j]])
+                if ga == gb:
+                    # same group twice in one tensor: unresolvable by
+                    # group choice; skip (cannot shard either way).
+                    continue
+                if ga > gb:
+                    ga, gb, i, j = gb, ga, j, i
+                c = by_pair.get((ga, gb))
+                if c is None:
+                    c = Conflict(len(by_pair), ga, gb, color, [])
+                    by_pair[(ga, gb)] = c
+                c.witnesses.append(Witness(site, i, j))
+
+
+def find_conflicts_reference(res: NDAResult) -> list[Conflict]:
+    """The original per-site python walk over every site — kept verbatim
+    as the exactness oracle for :func:`find_conflicts` (the vectorized
+    path must be bit-identical; see tests/test_fullscale.py)."""
     by_pair: dict[tuple[int, int], Conflict] = {}
     for site in res.all_sites():
         by_color: dict[int, list[int]] = defaultdict(list)
@@ -107,8 +138,6 @@ def find_conflicts(res: NDAResult) -> list[Conflict]:
                     i, j = idxs[a_pos], idxs[b_pos]
                     ga, gb = res.group(site.dims[i]), res.group(site.dims[j])
                     if ga == gb:
-                        # same group twice in one tensor: unresolvable by
-                        # group choice; skip (cannot shard either way).
                         continue
                     if ga > gb:
                         ga, gb, i, j = gb, ga, j, i
@@ -120,12 +149,51 @@ def find_conflicts(res: NDAResult) -> list[Conflict]:
     return list(by_pair.values())
 
 
+def find_conflicts(res: NDAResult) -> list[Conflict]:
+    """Conflict detection, vectorized over sites.
+
+    A site can only witness a conflict when two of its dims share a
+    color, so the per-site python pair walk is needed for almost no
+    sites.  The flat ``(site, dim-color)`` table is built once as numpy
+    index arrays; ``np.unique`` finds the (site, color) keys that occur
+    twice, and only the few flagged sites run the exact per-site walk —
+    in original site order, so conflict ids, witness order, and
+    downstream compat sets are bit-identical to
+    :func:`find_conflicts_reference`.
+    """
+    sites = list(res.all_sites())
+    colors = res.colors_arr
+    groups = res.groups_arr
+    site_idx = np.fromiter(
+        (k for k, s in enumerate(sites) for _ in s.dims),
+        dtype=np.int64,
+        count=sum(len(s.dims) for s in sites))
+    if site_idx.size == 0:
+        return []
+    dims = np.fromiter((n for s in sites for n in s.dims),
+                       dtype=np.int64, count=site_idx.size)
+    # (site, color) composite keys; a site witnesses a conflict only when
+    # one of its keys repeats
+    keys = site_idx * np.int64(len(colors)) + colors[dims]
+    uniq, counts = np.unique(keys, return_counts=True)
+    hot = np.unique(uniq[counts >= 2] // np.int64(len(colors)))
+    by_pair: dict[tuple[int, int], Conflict] = {}
+    for k in hot.tolist():
+        _site_conflicts(res, sites[k], colors, groups, by_pair)
+    return list(by_pair.values())
+
+
 def _group_adjacency(res: NDAResult) -> dict[int, set[int]]:
     adj: dict[int, set[int]] = defaultdict(set)
-    for d, u in res.m_edges:
-        gd, gu = res.group(d), res.group(u)
-        if gd != gu:
-            adj[gd].add(gu)
+    if not res.m_edges:
+        return adj
+    groups = res.groups_arr
+    edges = np.asarray(res.m_edges, dtype=np.int64)
+    gd, gu = groups[edges[:, 0]], groups[edges[:, 1]]
+    keep = gd != gu
+    pairs = np.unique(np.stack([gd[keep], gu[keep]], axis=1), axis=0)
+    for d, u in pairs.tolist():
+        adj[int(d)].add(int(u))
     return adj
 
 

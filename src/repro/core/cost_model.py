@@ -239,6 +239,10 @@ class CostModel:
         self._axis_bw_map = dict(hw.axis_bw)
         # optional per-axis collective recorder (see state_features)
         self._tally: dict | None = None
+        # site -> (colors, groups, sizes) memo: def sites are looked up
+        # once per *use* plus once per value, and sharing the tuple object
+        # lets the batched recost memoize resolutions by id(info)
+        self._info_cache: dict[int, tuple] = {}
         self._build_static_tables()
         self._build_base_rows()
 
@@ -267,6 +271,7 @@ class CostModel:
         cm._baseline = None
         cm._cache = {}
         cm._suppressed_cache = self._suppressed_cache   # analysis-only
+        cm._info_cache = self._info_cache               # analysis-only
         cm._axis_size = self._axis_size
         cm._axis_bw_map = dict(hw.axis_bw)
         cm._tally = None
@@ -283,10 +288,26 @@ class CostModel:
 
     def _site_info(self, site):
         """Precompute (colors, groups, sizes) per dim of a site, so the hot
-        path never touches the union-find."""
-        return (tuple(self.nda.color(n) for n in site.dims),
-                tuple(self.nda.group(n) for n in site.dims),
-                tuple(self.nda.node_sizes.get(n, 0) for n in site.dims))
+        path never touches the union-find.
+
+        Memoized per site object: a def site is looked up once per *use*
+        plus once per live value, and handing back the same tuple object
+        every time lets the batched recost (:meth:`recost`) memoize axis
+        resolutions by ``id(info)`` across all dirty ops of one action.
+        The cache entry keeps the site alive so its ``id`` stays valid.
+        """
+        key = id(site)
+        hit = self._info_cache.get(key)
+        if hit is not None and hit[0] is site:
+            return hit[1]
+        colors = self.nda.colors_arr
+        groups = self.nda.groups_arr
+        sizes = self.nda.node_sizes
+        info = (tuple(int(colors[n]) for n in site.dims),
+                tuple(int(groups[n]) for n in site.dims),
+                tuple(sizes.get(n, 0) for n in site.dims))
+        self._info_cache[key] = (site, info)
+        return info
 
     def _build_static_tables(self) -> None:
         prog = self.prog
@@ -501,30 +522,72 @@ class CostModel:
 
     # -- per-op / per-value costing ------------------------------------------
 
+    def _resolve(self, info, color_axes: dict, suppressed, memo: dict):
+        """Memoized :meth:`_site_axes_info`: ``memo`` maps ``id(info)`` to
+        the resolved axes, valid for one ``(color_axes, suppressed)``
+        pair (sites are interned by :meth:`_site_info`, so every op that
+        touches the same def site shares one resolution per batch)."""
+        key = id(info)
+        hit = memo.get(key)
+        if hit is None:
+            for c in info[0]:
+                if c in color_axes:
+                    hit = self._site_axes_info(info, color_axes, suppressed)
+                    break
+            else:
+                # no dim of this site carries an assigned color: the
+                # resolution is trivially all-replicated
+                hit = [()] * len(info[0])
+            memo[key] = hit
+        return hit
+
     def op_cost_row(self, op_idx: int, color_axes: dict, suppressed
                     ) -> tuple[float, float, float, float, float]:
         """Contribution of one op to the breakdown totals under a sharding:
         (compute_time, memory_time, collective_time, flops, comm_bytes)."""
+        return self._op_row(op_idx, color_axes, suppressed, {})
+
+    def _op_row(self, op_idx: int, color_axes: dict, suppressed,
+                memo: dict) -> tuple[float, float, float, float, float]:
         op, trip, uses, reshard, outs, opnb, resnb = self._op_specs[op_idx]
-        coll = 0.0
-        comm = 0.0
+        # resolve every site first (shared memo); ops all of whose sites
+        # resolve to no axes cost exactly their unsharded base row
+        sharded = False
         use_axes = []
-        for slot, vid in enumerate(op.operands):
+        def_axes = []
+        for slot in range(len(op.operands)):
             uinfo = uses[slot]
             if uinfo is None:
                 use_axes.append(())
+                def_axes.append(None)
                 continue
-            ua = self._site_axes_info(uinfo, color_axes, suppressed)
+            ua = self._resolve(uinfo, color_axes, suppressed, memo)
             use_axes.append(ua)
+            sharded = sharded or any(ua)
             dinfo = reshard[slot]
             if dinfo is None:
+                def_axes.append(None)
+            else:
+                da = self._resolve(dinfo, color_axes, suppressed, memo)
+                def_axes.append(da)
+                sharded = sharded or any(da)
+        out_axes = []
+        for oinfo in outs:
+            oa = self._resolve(oinfo, color_axes, suppressed, memo)
+            out_axes.append(oa)
+            sharded = sharded or any(oa)
+        base = getattr(self, "base_rows", None)
+        if not sharded and base is not None:
+            return base[op_idx]
+        coll = 0.0
+        comm = 0.0
+        for slot, vid in enumerate(op.operands):
+            da = def_axes[slot]
+            if da is None:
                 continue
-            da = self._site_axes_info(dinfo, color_axes, suppressed)
-            t, b = self._reshard_cost(vid, da, ua, trip)
+            t, b = self._reshard_cost(vid, da, use_axes[slot], trip)
             coll += t
             comm += b
-        out_axes = [self._site_axes_info(i, color_axes, suppressed)
-                    for i in outs]
         flops, contract_axes = self._op_flops(op, use_axes, out_axes)
         bytes_moved = sum(nb / self._factor(a)
                           for nb, a in zip(opnb, use_axes)) + \
@@ -542,11 +605,43 @@ class CostModel:
 
     def value_local_bytes(self, vid: int, color_axes: dict,
                           suppressed) -> float:
+        return self._value_bytes(vid, color_axes, suppressed, {})
+
+    def _value_bytes(self, vid: int, color_axes: dict, suppressed,
+                     memo: dict) -> float:
         info = self._val_info.get(vid)
         if info is None:
             info = self._site_info(self.nda.def_site[vid])
-        axes = self._site_axes_info(info, color_axes, suppressed)
+        axes = self._resolve(info, color_axes, suppressed, memo)
         return self.prog.types[vid].nbytes / self._factor(axes)
+
+    def recost(self, op_indices, vids, color_axes: dict, suppressed
+               ) -> tuple[dict[int, tuple], dict[int, float]]:
+        """Batched re-costing of dirty ops and values under one sharding.
+
+        One site-axes resolution memo is shared across the whole batch:
+        every def/use site is conflict-resolved at most once per call
+        instead of once per op that touches it, which is where the
+        incremental evaluator spent most of its time on thousand-op
+        programs (a single action dirties ~80 rows that share a handful
+        of colors).
+
+        Args:
+            op_indices: op indices to re-cost (the dirty-op set).
+            vids: value ids to re-measure local bytes for.
+            color_axes: color -> mesh-axes assignment of the state.
+            suppressed: suppressed group set (``suppressed_for``).
+
+        Returns:
+            ``({op_idx: cost row}, {vid: local bytes})`` over exactly the
+            requested indices (rows equal to base are *not* filtered).
+        """
+        memo: dict = {}
+        rows = {i: self._op_row(i, color_axes, suppressed, memo)
+                for i in op_indices}
+        vbytes = {v: self._value_bytes(v, color_axes, suppressed, memo)
+                  for v in vids}
+        return rows, vbytes
 
     def peak_with_overrides(self, vbytes: dict[int, float]) -> float:
         """Peak live bytes for a state given only the values whose local
@@ -606,19 +701,19 @@ class CostModel:
         suppressed = self.suppressed_for(state.bits)
         dirty_ops, dirty_vals = self.state_dirty_sets(state)
         totals = list(self._base_totals)
+        new_rows, new_vbytes = self.recost(dirty_ops, dirty_vals,
+                                           color_axes, suppressed)
         rows: dict[int, tuple] = {}
-        for i in dirty_ops:
-            new = self.op_cost_row(i, color_axes, suppressed)
+        for i, new in new_rows.items():
             old = self.base_rows[i]
-            if new != old:
+            if new is not old and new != old:
                 rows[i] = new
                 for k in range(_ROW_FIELDS):
                     totals[k] += new[k] - old[k]
         vbytes: dict[int, float] = {}
         base = self._base_val_bytes
         slot = self._vid_slot
-        for vid in dirty_vals:
-            nb = self.value_local_bytes(vid, color_axes, suppressed)
+        for vid, nb in new_vbytes.items():
             if nb != base[slot[vid]]:
                 vbytes[vid] = nb
         peak = self.peak_with_overrides(vbytes)

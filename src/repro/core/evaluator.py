@@ -63,8 +63,11 @@ class IncrementalEvaluator:
     """Evaluation façade the search backends run against.
 
     ``max_records`` bounds the LRU store of diff records (each holds the
-    per-op rows of one state); the breakdown transposition cache is
-    unbounded — it is a few floats per state.
+    per-op rows of one state); ``max_cache`` bounds the breakdown
+    transposition cache the same way, so thousand-op searches that visit
+    millions of states cannot grow memory without limit.  Eviction only
+    costs a re-evaluation on a later revisit — exactness is unaffected
+    (``tests/test_fullscale.py`` pins this against ``evaluate_dense``).
 
     ``constraints`` (a compiled ``repro.core.constraints.ConstraintSet``)
     marks violating states infeasible: ``paper_cost`` /
@@ -75,13 +78,15 @@ class IncrementalEvaluator:
     """
 
     def __init__(self, cost_model: CostModel, *,
-                 max_records: int = 4096, constraints=None) -> None:
+                 max_records: int = 4096, max_cache: int = 262144,
+                 constraints=None) -> None:
         self.cm = cost_model
         self.stats = EvalStats()
         self.constraints = constraints
         self._records: OrderedDict[ShardingState, _Record] = OrderedDict()
-        self._bd: dict[ShardingState, CostBreakdown] = {}
+        self._bd: OrderedDict[ShardingState, CostBreakdown] = OrderedDict()
         self._max_records = max_records
+        self._max_cache = max_cache
 
     # -- public API ----------------------------------------------------------
 
@@ -108,6 +113,7 @@ class IncrementalEvaluator:
         bd = self._bd.get(state)
         if bd is not None:
             self.stats.cache_hits += 1
+            self._bd.move_to_end(state)
             return bd
         return self._record_from_base(state).breakdown
 
@@ -131,6 +137,7 @@ class IncrementalEvaluator:
         bd = self._bd.get(state)
         if bd is not None:
             self.stats.cache_hits += 1
+            self._bd.move_to_end(state)
             return state, bd
         prec = self._records.get(parent)
         if prec is None:
@@ -179,6 +186,9 @@ class IncrementalEvaluator:
 
     def _store(self, state: ShardingState, rec: _Record) -> _Record:
         self._bd[state] = rec.breakdown
+        self._bd.move_to_end(state)
+        if len(self._bd) > self._max_cache:
+            self._bd.popitem(last=False)
         self._records[state] = rec
         if len(self._records) > self._max_records:
             self._records.popitem(last=False)
@@ -206,12 +216,13 @@ class IncrementalEvaluator:
         pbd = prec.breakdown
         totals = [pbd.compute_time, pbd.memory_time, pbd.collective_time,
                   pbd.flops, pbd.comm_bytes]
+        new_rows, new_vbytes = cm.recost(dirty_ops, dirty_vals,
+                                         color_axes, suppressed)
         rows = dict(prec.rows)
         base_rows = cm.base_rows
-        for i in dirty_ops:
-            new = cm.op_cost_row(i, color_axes, suppressed)
+        for i, new in new_rows.items():
             old = rows.get(i, base_rows[i])
-            if new != old:
+            if new is not old and new != old:
                 for k in range(_ROW_FIELDS):
                     totals[k] += new[k] - old[k]
                 if new == base_rows[i]:
@@ -224,8 +235,7 @@ class IncrementalEvaluator:
         bytes_changed = False
         base_val = cm._base_val_bytes
         slot = cm._vid_slot
-        for vid in dirty_vals:
-            nb = cm.value_local_bytes(vid, color_axes, suppressed)
+        for vid, nb in new_vbytes.items():
             old = vbytes.get(vid, base_val[slot[vid]])
             if nb != old:
                 bytes_changed = True

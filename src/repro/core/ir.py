@@ -25,17 +25,28 @@ class TensorType:
     shape: tuple[int, ...]
     dtype: Any
 
+    def __post_init__(self) -> None:
+        # size/nbytes sit on the cost model's per-row hot path (millions
+        # of reads per search); precompute once instead of re-running
+        # np.prod + np.dtype per access
+        size = 1
+        for s in self.shape:
+            size *= int(s)
+        object.__setattr__(self, "_size", size)
+        object.__setattr__(self, "_nbytes",
+                           size * np.dtype(self.dtype).itemsize)
+
     @property
     def rank(self) -> int:
         return len(self.shape)
 
     @property
     def size(self) -> int:
-        return int(np.prod(self.shape)) if self.shape else 1
+        return self._size
 
     @property
     def nbytes(self) -> int:
-        return self.size * np.dtype(self.dtype).itemsize
+        return self._nbytes
 
 
 @dataclasses.dataclass

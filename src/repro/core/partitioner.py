@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import time
 from collections import Counter, defaultdict
 from typing import Callable
 
@@ -430,6 +431,10 @@ class ToastArtifacts:
     nda: NDAResult
     analysis: ConflictAnalysis
     actions_by_mesh: dict = dataclasses.field(default_factory=dict)
+    # wall seconds per analysis phase ("trace" / "nda" / "conflicts"),
+    # filled in by :func:`analyze` — the zoo's --profile and the
+    # fullscale benchmark report these
+    phase_seconds: dict = dataclasses.field(default_factory=dict)
 
 
 def analyze(fn: Callable, args: tuple, kwargs: dict | None = None
@@ -442,12 +447,18 @@ def analyze(fn: Callable, args: tuple, kwargs: dict | None = None
         kwargs: example keyword arguments.
 
     Returns:
-        :class:`ToastArtifacts` reusable across meshes and searches.
+        :class:`ToastArtifacts` reusable across meshes and searches,
+        with per-phase wall times in ``phase_seconds``.
     """
+    t0 = time.perf_counter()
     prog = extract_program(fn, *args, **(kwargs or {}))
+    t1 = time.perf_counter()
     nda = run_nda(prog)
+    t2 = time.perf_counter()
     analysis = analyze_conflicts(nda)
-    return ToastArtifacts(prog, nda, analysis)
+    t3 = time.perf_counter()
+    phases = {"trace": t1 - t0, "nda": t2 - t1, "conflicts": t3 - t2}
+    return ToastArtifacts(prog, nda, analysis, phase_seconds=phases)
 
 
 def _state_specs(cm: CostModel, state: ShardingState,

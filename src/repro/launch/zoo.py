@@ -147,7 +147,8 @@ def run_model(arch: str, mesh: MeshSpec, *,
               plan_store: PlanStore | None = None,
               full: bool = False,
               min_dims: int = 10,
-              capture: dict | None = None) -> dict:
+              capture: dict | None = None,
+              profile: bool = False) -> dict:
     """Auto-partition one zoo model and summarize the outcome.
 
     Args:
@@ -163,32 +164,66 @@ def run_model(arch: str, mesh: MeshSpec, *,
         capture: optional dict; on success ``capture[arch]`` receives
             ``(session, request, plan)`` so the measured-execution pass
             can re-cost and execute plan variants without re-analysis.
+        profile: trace allocations with ``tracemalloc`` and attach a
+            ``row["profile"]`` wall/alloc breakdown per pipeline stage
+            (roughly 2x slower — a diagnosis mode, not a benchmark).
 
     Returns:
         A flat JSON-friendly result row; ``row["status"]`` is ``"ok"`` or
         ``"error"`` (with ``row["error"]`` set).
     """
-    cfg = get_config(arch)
-    if not full:
-        cfg = cfg.reduced()
+    cfg_full = get_config(arch)
+    cfg = cfg_full if full else cfg_full.reduced()
     row = {"model": arch, "family": cfg.family,
+           # params of the config actually traced ...
            "params_m": round(cfg.num_params() / 1e6, 2),
+           # ... and of the production config, so reduced-sweep rows are
+           # not misread as the model's real size
+           "params_m_full": round(cfg_full.num_params() / 1e6, 2),
            "status": "ok", "mesh": "x".join(map(str, mesh.sizes))}
+    if profile:
+        import tracemalloc
+        was_tracing = tracemalloc.is_tracing()
+        if not was_tracing:
+            tracemalloc.start()
     try:
         fn, args, names = step_and_inputs(cfg, shape)
+        if profile:
+            tracemalloc.reset_peak()
+        t0 = time.perf_counter()
         sess = Session(fn, args, plan_store=plan_store)
         t_analysis = sess.analysis_seconds
+        if profile:
+            analysis_wall = time.perf_counter() - t0
+            _, analysis_peak = tracemalloc.get_traced_memory()
+            tracemalloc.reset_peak()
+        t0 = time.perf_counter()
         request = Request(
             mesh=mesh, hw=hw, backend=backend,
             search_config=search_config, min_dims=min_dims,
             logical_axes=names)
         plan = sess.partition(request)
+        if profile:
+            search_wall = time.perf_counter() - t0
+            _, search_peak = tracemalloc.get_traced_memory()
         if capture is not None:
             capture[arch] = (sess, request, plan)
     except Exception as e:                      # noqa: BLE001
         row.update(status="error", error=repr(e),
                    traceback=traceback.format_exc(limit=5))
         return row
+    finally:
+        if profile and not was_tracing:
+            tracemalloc.stop()
+    if profile:
+        row["profile"] = {
+            "phases": {k: round(v, 4) for k, v in
+                       sess.artifacts.phase_seconds.items()},
+            "analysis_wall_s": round(analysis_wall, 4),
+            "analysis_peak_mb": round(analysis_peak / 2**20, 2),
+            "search_wall_s": round(search_wall, 4),
+            "search_peak_mb": round(search_peak / 2**20, 2),
+        }
     base, bd = plan.baseline_breakdown, plan.breakdown
     pf = plan.eval_stats.get("portfolio", {})
     row.update(
@@ -207,7 +242,12 @@ def run_model(arch: str, mesh: MeshSpec, *,
         backend=plan.backend,
         winner=pf.get("winner", plan.backend),
         cached=plan.cached,
-        fingerprint=plan.fingerprint[:12],
+        # plans loaded from old stores can carry an empty fingerprint —
+        # fall back to the session's so rows stay attributable to a
+        # plan-store key
+        fingerprint=(plan.fingerprint or sess.fingerprint)[:12],
+        analysis_phases={k: round(v, 4) for k, v in
+                         sess.artifacts.phase_seconds.items()},
         rules={k: list(v) for k, v in plan.logical_rules.items()},
     )
     return row
@@ -222,7 +262,8 @@ def run_zoo(mesh: MeshSpec, *, archs: tuple[str, ...] | None = None,
             full: bool = False,
             min_dims: int = 10,
             verbose: bool = True,
-            captures: dict | None = None) -> dict:
+            captures: dict | None = None,
+            profile: bool = False) -> dict:
     """Sweep the whole config zoo on one mesh.
 
     Args:
@@ -239,6 +280,7 @@ def run_zoo(mesh: MeshSpec, *, archs: tuple[str, ...] | None = None,
         verbose: print progress lines as models finish.
         captures: optional dict collecting per-arch ``(session, request,
             plan)`` for the ``--measure`` pass (see ``run_model``).
+        profile: per-model wall/alloc breakdown (see ``run_model``).
 
     Returns:
         The sweep record: ``{"mesh", "shape", "backend", "results": [...],
@@ -255,7 +297,8 @@ def run_zoo(mesh: MeshSpec, *, archs: tuple[str, ...] | None = None,
         t = time.perf_counter()
         row = run_model(arch, mesh, shape=shape, hw=hw, backend=backend,
                         search_config=search_config, plan_store=plan_store,
-                        full=full, min_dims=min_dims, capture=captures)
+                        full=full, min_dims=min_dims, capture=captures,
+                        profile=profile)
         rows.append(row)
         if verbose:
             if row["status"] == "ok":
@@ -318,6 +361,31 @@ def format_table(rows: list[dict]) -> str:
     return "\n".join(lines)
 
 
+def format_profile(rows: list[dict]) -> str:
+    """Render the per-model ``--profile`` wall/alloc breakdown.
+
+    Args:
+        rows: result rows from :func:`run_zoo` with ``profile`` attached.
+
+    Returns:
+        A printable multi-line breakdown (one line per profiled model).
+    """
+    lines = ["\n--profile: per-model phase breakdown "
+             "(wall seconds / tracemalloc peak MB)"]
+    for r in rows:
+        p = r.get("profile")
+        if not p:
+            continue
+        phases = "  ".join(f"{k}={v:.3f}s"
+                           for k, v in p["phases"].items())
+        lines.append(
+            f"[{r['model']:>16}] {phases}  | analysis "
+            f"{p['analysis_wall_s']:.3f}s/{p['analysis_peak_mb']:.1f}MB"
+            f"  search {p['search_wall_s']:.3f}s/"
+            f"{p['search_peak_mb']:.1f}MB")
+    return "\n".join(lines)
+
+
 def main(argv: list[str] | None = None) -> dict:
     """CLI entry point; returns the sweep record it wrote.
 
@@ -352,6 +420,11 @@ def main(argv: list[str] | None = None) -> dict:
     ap.add_argument("--smoke", action="store_true",
                     help="tiny cell + model subset so --measure finishes "
                          "in minutes (the CI fast path)")
+    ap.add_argument("--profile", action="store_true",
+                    help="run the sweep under cProfile + tracemalloc and "
+                         "print per-model phase wall/alloc breakdowns "
+                         "plus the hottest functions (slower; for "
+                         "diagnosis, not benchmarking)")
     ap.add_argument("--measure", action="store_true",
                     help="execute plan variants on a simulated device "
                          "mesh, calibrate the cost model, write "
@@ -396,10 +469,26 @@ def main(argv: list[str] | None = None) -> dict:
     if args.smoke:
         shape = ZOO_SHAPE_SMOKE
     captures: dict | None = {} if args.measure else None
+    profiler = None
+    if args.profile:
+        import cProfile
+        profiler = cProfile.Profile()
+        profiler.enable()
     record = run_zoo(mesh, archs=archs, shape=shape, hw=hw,
                      backend=args.backend, search_config=search_config,
                      plan_store=store, full=args.full,
-                     min_dims=args.min_dims, captures=captures)
+                     min_dims=args.min_dims, captures=captures,
+                     profile=args.profile)
+    if profiler is not None:
+        profiler.disable()
+        print(format_profile(record["results"]))
+        import io
+        import pstats
+        buf = io.StringIO()
+        pstats.Stats(profiler, stream=buf).sort_stats(
+            "cumulative").print_stats(25)
+        print("\n--profile: hottest functions (cProfile, cumulative)")
+        print(buf.getvalue())
 
     print()
     print(format_table(record["results"]))
