@@ -19,6 +19,9 @@ Sections:
 - measure: measured execution of plan variants on a simulated device
           mesh + cost-model calibration (writes BENCH_measured.json) —
           the predict→measure→calibrate loop of docs/measure.md.
+- meshsearch: mesh-shape co-search over a device budget — winner vs the
+          best fixed 2-D mesh per smoke model (writes
+          BENCH_meshsearch.json); opt-in, searches every candidate mesh.
 - fullscale: production llama3_405b / mixtral_8x22b programs on an 8x4
           mesh — per-phase analysis time, dense vs incremental
           evals/sec, real search, vectorized-analysis exactness oracle
@@ -153,6 +156,36 @@ def measure_sweep(out="BENCH_measured.json", mesh="2x2",
     pathlib.Path(out).write_text(json.dumps(mrec, indent=2))
 
 
+def meshsearch_sweep(out="BENCH_meshsearch.json", devices=16,
+                     plan_store=None):
+    import json
+    import pathlib
+
+    from repro.launch import zoo
+    store = None
+    if plan_store:
+        from repro.ckpt.plan_store import PlanStore
+        store = PlanStore(plan_store)
+    record = zoo.run_cosearch(devices, archs=zoo.SMOKE_ARCHS,
+                              shape=zoo.ZOO_SHAPE_SMOKE,
+                              plan_store=store, verbose=False)
+    for r in record["results"]:
+        if r["status"] != "ok" or r["winner"] is None:
+            _row(f"meshsearch.{r['model']}.ERROR", 0.0,
+                 str(r.get("error", "no winner"))[:80])
+            continue
+        w = r["winner"]
+        _row(f"meshsearch.{r['model']}", r["cosearch_s"] * 1e6,
+             f"winner={w['mesh_str']};cost={w['cost']:.4f};"
+             f"best_fixed={r['best_fixed']['mesh_str']};"
+             f"fixed_cost={r['best_fixed']['cost']:.4f};"
+             f"ties_or_beats={int(r['ties_or_beats_fixed'])};"
+             f"candidates={len(r['candidates'])}")
+    pathlib.Path(out).write_text(json.dumps(record, indent=2))
+    if record["failures"]:
+        raise SystemExit("; ".join(record["failures"]))
+
+
 def kernel_micro():
     from repro.kernels import ops, ref
     key = jax.random.PRNGKey(0)
@@ -183,7 +216,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--section", default="all",
                     choices=["all", "fig8", "fig10", "nda", "search",
-                             "zoo", "measure", "fullscale", "kernels"])
+                             "zoo", "measure", "meshsearch", "fullscale",
+                             "kernels"])
     ap.add_argument("--models", default=",".join(MODELS))
     ap.add_argument("--search-out", default="BENCH_search.json")
     ap.add_argument("--zoo-out", default="BENCH_zoo.json")
@@ -193,6 +227,9 @@ def main() -> None:
     ap.add_argument("--measure-out", default="BENCH_measured.json")
     ap.add_argument("--measure-mesh", default="2x2",
                     help="simulated mesh for the measure section")
+    ap.add_argument("--meshsearch-out", default="BENCH_meshsearch.json")
+    ap.add_argument("--meshsearch-devices", type=int, default=16,
+                    help="device budget for the meshsearch section")
     ap.add_argument("--fullscale-out", default="BENCH_fullscale.json")
     ap.add_argument("--fullscale-mesh", default="8x4",
                     help="mesh for the fullscale section")
@@ -217,6 +254,10 @@ def main() -> None:
     if args.section == "measure":       # opt-in: executes real programs
         measure_sweep(out=args.measure_out, mesh=args.measure_mesh,
                       plan_store=args.zoo_plan_store or None)
+    if args.section == "meshsearch":    # opt-in: searches many meshes
+        meshsearch_sweep(out=args.meshsearch_out,
+                         devices=args.meshsearch_devices,
+                         plan_store=args.zoo_plan_store or None)
     if args.section == "fullscale":     # opt-in: production-size configs
         from benchmarks import fullscale
         fullscale.run(out=args.fullscale_out, mesh=args.fullscale_mesh,

@@ -1,0 +1,50 @@
+"""Mesh-shape co-search in miniature: which mesh should 16 devices form?
+
+    PYTHONPATH=src python examples/mesh_cosearch.py
+
+A fixed mesh shape is itself a guess — 8x2 and 4x4 can differ by 15% on
+the same model, and whether a pod-crossing (DCN) axis is worth its slow
+links depends on what the search ends up communicating over it.
+``Session.co_search`` answers the question jointly: one program analysis,
+every divisor factorization of the device budget (single- and multi-pod),
+one plan search per surviving candidate, one comparable cost per pair.
+
+The zoo-driver equivalent (with fixed-mesh baselines and measured
+validation) is ``python -m repro.launch.zoo --co-search 16 --smoke``.
+"""
+from repro.api import Request, Session
+from repro.configs import get_config
+from repro.core.cost_model import MeshSpec
+from repro.launch.specs import step_and_inputs
+from repro.launch.zoo import ZOO_SHAPE, zoo_portfolio
+
+cfg = get_config("qwen2_05b").reduced()
+fn, args, names = step_and_inputs(cfg, ZOO_SHAPE)
+
+sess = Session(fn, args)                        # trace + NDA + conflicts once
+template = Request(mesh=MeshSpec(("data", "model"), (1, 1)),
+                   backend="portfolio", search_config=zoo_portfolio(),
+                   logical_axes=names)
+
+# 16 devices, optionally split across 2 pods whose links cross DCN
+res = sess.co_search(template, devices=16, pods=(1, 2), verbose=True)
+
+print(f"\n{len(res.candidates)} candidate meshes, "
+      f"{sum(r['status'] == 'ok' for r in res.rows)} searched, "
+      f"{sum(r['status'] == 'pruned' for r in res.rows)} pruned "
+      f"by the memory bound, {res.seconds:.1f}s total")
+
+w = "x".join(str(s) for s in res.best_mesh.sizes)
+print(f"winner: {w}  cost={res.best_plan.cost:.4f}  "
+      f"(vs {res.rows[0]['mesh_str']} at {res.rows[0]['cost']:.4f})")
+
+mp = res.best_multi_pod()
+if mp is not None:
+    mesh, plan = mp
+    print(f"best multi-pod: {'x'.join(str(s) for s in mesh.sizes)} "
+          f"(dcn axes {mesh.dcn_axes})  cost={plan.cost:.4f}")
+
+# every candidate's plan is a full ShardingPlan — apply the winner as usual
+print("\nwinning sharding rules:")
+for name, axes in sorted(res.best_plan.logical_rules.items()):
+    print(f"  {name} -> {'/'.join(axes)}")

@@ -49,6 +49,7 @@ from repro.core.cost_model import (CostModel, HardwareSpec, MeshSpec,
                                    ShardingState)
 from repro.core.evaluator import IncrementalEvaluator
 from repro.core.ir import program_fingerprint
+from repro.core.mesh_search import MeshCandidate, candidate_meshes
 from repro.core.partitioner import (ShardingPlan, ToastArtifacts,  # noqa: F401
                                     _constraint_specs, _logical_rules,
                                     _state_specs, analyze,
@@ -56,8 +57,8 @@ from repro.core.partitioner import (ShardingPlan, ToastArtifacts,  # noqa: F401
 from repro.core.search import SearchBackend, get_backend
 
 __all__ = [
-    "Constraint", "ConstraintError", "Forbid", "Pin", "Replicate",
-    "Request", "Session", "ShardingPlan",
+    "Constraint", "ConstraintError", "CoSearchResult", "Forbid", "Pin",
+    "Replicate", "Request", "Session", "ShardingPlan",
 ]
 
 
@@ -133,6 +134,53 @@ class Request:
                 "constraints": self.constraints}
 
 
+@dataclasses.dataclass
+class CoSearchResult:
+    """Outcome of one mesh-shape co-search (:meth:`Session.co_search`).
+
+    Attributes:
+        devices: the device budget the candidates factorize.
+        best_mesh: mesh of the jointly best ``(mesh, plan)`` pair, or
+            ``None`` when no candidate searched successfully.
+        best_plan: the winning plan (``None`` alongside ``best_mesh``).
+        rows: one JSON-friendly record per candidate — mesh, status
+            ("ok" / "pruned" / "error"), cost, feasibility, peak bound,
+            search seconds, cache provenance.
+        plans: searched plans keyed by candidate ``MeshSpec``.
+        candidates: the enumerated (and possibly pruned)
+            ``MeshCandidate`` list, enumeration order.
+        seconds: total co-search wall time.
+    """
+
+    devices: int
+    best_mesh: MeshSpec | None
+    best_plan: ShardingPlan | None
+    rows: list[dict]
+    plans: dict[MeshSpec, ShardingPlan]
+    candidates: list[MeshCandidate]
+    seconds: float
+
+    def best_multi_pod(self) -> tuple[MeshSpec, ShardingPlan] | None:
+        """The best searched candidate whose mesh crosses DCN.
+
+        Returns:
+            The ``(mesh, plan)`` pair with the lowest (feasible-first)
+            cost among candidates with a non-empty ``dcn_axes``, or
+            ``None`` when no multi-pod candidate was searched.
+        """
+        best: tuple | None = None
+        for row in self.rows:
+            if row.get("status") != "ok" or not row["mesh"]["dcn_axes"]:
+                continue
+            mesh = MeshSpec(tuple(row["mesh"]["axes"]),
+                            tuple(row["mesh"]["sizes"]),
+                            tuple(row["mesh"]["dcn_axes"]))
+            key = (not row["feasible"], row["cost"])
+            if best is None or key < best[0]:
+                best = (key, mesh, self.plans[mesh])
+        return None if best is None else (best[1], best[2])
+
+
 class Session:
     """One traced-and-analyzed function, ready for staged partitioning.
 
@@ -173,6 +221,10 @@ class Session:
         self._fingerprint: str | None = None
         self._cost_models: dict[tuple[MeshSpec, HardwareSpec],
                                 CostModel] = {}
+        # first model built per HardwareSpec: later meshes clone it via
+        # CostModel.with_mesh, sharing every static analysis table (the
+        # mesh-shape co-search reuse — one analysis, many meshes)
+        self._hw_base_models: dict[HardwareSpec, CostModel] = {}
 
     @property
     def fingerprint(self) -> str:
@@ -185,8 +237,13 @@ class Session:
         key = (mesh, hw)
         cm = self._cost_models.get(key)
         if cm is None:
-            art = self.artifacts
-            cm = CostModel(art.prog, art.nda, art.analysis, mesh, hw)
+            base = self._hw_base_models.get(hw)
+            if base is not None:
+                cm = base.with_mesh(mesh)
+            else:
+                art = self.artifacts
+                cm = CostModel(art.prog, art.nda, art.analysis, mesh, hw)
+                self._hw_base_models[hw] = cm
             self._cost_models[key] = cm
         return cm
 
@@ -296,6 +353,110 @@ class Session:
         if store is not None:
             store.put(plan, request.hw, store_params)
         return plan
+
+    def co_search(self, request_template: Request, devices: int, *,
+                  pods: tuple[int, ...] = (1, 2),
+                  max_ici_axes: int = 3,
+                  plan_store=None, verbose: bool = False
+                  ) -> CoSearchResult:
+        """Jointly choose the mesh factorization *and* the plan.
+
+        Enumerates every candidate mesh for the device budget
+        (``repro.core.mesh_search``: divisor factorizations, deduped up
+        to axis renaming, pruned by the replicated-state memory lower
+        bound), searches a plan per surviving candidate with this
+        session's single program analysis — cost models for new meshes
+        are ``CostModel.with_mesh`` clones sharing every static table —
+        and returns the jointly best ``(mesh, plan)`` pair.  Costs are
+        comparable across meshes because the paper cost normalizes by
+        the mesh-independent unsharded baseline.
+
+        Args:
+            request_template: request whose ``mesh`` field is replaced
+                by each candidate (backend, hardware, constraints and
+                ``min_dims`` apply to every per-mesh search).
+                Constraints naming axes absent from a candidate mesh
+                fail that candidate only (row status "error").
+            devices: total device budget ``N`` to factorize.
+            pods: pod counts to consider; non-divisors of ``N`` are
+                skipped, ``1`` is the single-pod all-ICI mesh, counts
+                > 1 add a ``pod`` axis crossing DCN.
+            max_ici_axes: most ICI axes per candidate (≤ 3).
+            plan_store: per-call plan store override (every per-mesh
+                search keys separately — mesh, including ``dcn_axes``,
+                is part of the plan key).
+            verbose: print one line per candidate as searches finish.
+
+        Returns:
+            A :class:`CoSearchResult`; ``best_mesh``/``best_plan`` are
+            ``None`` only when every candidate was pruned or errored.
+        """
+        t0 = time.perf_counter()
+        hw = request_template.hw
+        prog = self.artifacts.prog
+        dim_sizes = {d for t in prog.types.values() for d in t.shape}
+        raw = candidate_meshes(devices, pods=pods,
+                               max_ici_axes=max_ici_axes)
+        if not raw:
+            raise ValueError(
+                f"no candidate meshes for devices={devices} with "
+                f"pods={tuple(pods)} (no pod count divides the budget)")
+        # the unsharded peak is mesh-independent: any candidate's model
+        # (or a fresh one) supplies it for the pruning bound
+        base_peak = self._cost_model(raw[0].mesh, hw)._base_peak
+        cands = candidate_meshes(
+            devices, pods=pods, max_ici_axes=max_ici_axes,
+            dim_sizes=dim_sizes, base_peak=base_peak,
+            memory_budget=hw.hbm_per_chip)
+
+        rows: list[dict] = []
+        plans: dict[MeshSpec, ShardingPlan] = {}
+        best: tuple | None = None
+        for cand in cands:
+            row = {"mesh": cand.mesh.as_dict(),
+                   "mesh_str": cand.mesh_str,
+                   "devices": cand.mesh.num_devices,
+                   "multi_pod": bool(cand.mesh.dcn_axes),
+                   "peak_lower_bound_gb":
+                       round(cand.peak_lower_bound / 2**30, 6),
+                   "pruned": cand.pruned}
+            if cand.pruned:
+                row["status"] = "pruned"
+                rows.append(row)
+                continue
+            request = dataclasses.replace(request_template,
+                                          mesh=cand.mesh)
+            try:
+                plan = self.partition(request, plan_store=plan_store)
+            except Exception as e:                  # noqa: BLE001
+                row.update(status="error", error=repr(e))
+                rows.append(row)
+                continue
+            feasible = bool(plan.breakdown["peak_bytes"]
+                            <= hw.hbm_per_chip)
+            row.update(
+                status="ok", cost=round(plan.cost, 6), feasible=feasible,
+                runtime_est=plan.breakdown["runtime"],
+                peak_gb=round(plan.breakdown["peak_bytes"] / 2**30, 6),
+                search_s=round(plan.search_seconds, 3),
+                cached=plan.cached, backend=plan.backend)
+            rows.append(row)
+            plans[cand.mesh] = plan
+            key = (not feasible, plan.cost)
+            if best is None or key < best[0]:
+                best = (key, cand.mesh, plan)
+            if verbose:
+                print(f"[co-search {cand.mesh_str:>10}"
+                      f"{' dcn' if cand.mesh.dcn_axes else '    '}] "
+                      f"cost={plan.cost:.4f} "
+                      f"feasible={'Y' if feasible else 'N'} "
+                      f"{plan.search_seconds:6.2f}s", flush=True)
+        return CoSearchResult(
+            devices=devices,
+            best_mesh=None if best is None else best[1],
+            best_plan=None if best is None else best[2],
+            rows=rows, plans=plans, candidates=cands,
+            seconds=time.perf_counter() - t0)
 
     def plan_for_state(self, request: Request,
                        state: ShardingState, *,

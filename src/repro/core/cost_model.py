@@ -206,6 +206,15 @@ class CostBreakdown:
 
 _MATMUL_PRIMS = {"dot_general", "conv_general_dilated"}
 
+# static tables built by _build_static_tables: functions of (Program, NDA)
+# only — independent of both the mesh shape and the hardware constants,
+# so with_hardware / with_mesh share them read-only instead of rebuilding
+_STATIC_TABLE_ATTRS = (
+    "_op_specs", "_color_ops", "_group_ops", "_sg_groups",
+    "_live_vids", "_vid_slot", "_live_start", "_live_end",
+    "_val_info", "_color_vals", "_group_vals",
+    "_base_val_bytes", "_base_delta", "_base_peak")
+
 # a cost row is (compute_time, memory_time, collective_time, flops,
 # comm_bytes) — the per-op contribution to the breakdown totals.
 _ROW_FIELDS = 5
@@ -276,12 +285,50 @@ class CostModel:
         cm._axis_bw_map = dict(hw.axis_bw)
         cm._tally = None
         # hardware-independent static tables, shared read-only
-        for name in ("_op_specs", "_color_ops", "_group_ops", "_sg_groups",
-                     "_live_vids", "_vid_slot", "_live_start", "_live_end",
-                     "_val_info", "_color_vals", "_group_vals",
-                     "_base_val_bytes", "_base_delta", "_base_peak"):
+        for name in _STATIC_TABLE_ATTRS:
             setattr(cm, name, getattr(self, name))
         cm._build_base_rows()
+        return cm
+
+    def with_mesh(self, mesh: MeshSpec) -> "CostModel":
+        """A cost model for the same analysis over a different mesh.
+
+        The dual of :meth:`with_hardware`, and what makes mesh-shape
+        co-search cheap: every static table built by ``__init__`` —
+        per-op site infos, color/group dirty indices, live-range
+        intervals — depends only on the *program analysis*, and even the
+        unsharded base cost rows are mesh-independent (the replicated
+        state does no collectives).  All of them are shared read-only;
+        the new model only gets fresh axis-size/bandwidth lookup maps
+        and empty evaluation caches.
+
+        Args:
+            mesh: the mesh the new model resolves sharding states
+                against (its ``dcn_axes`` select the DCN bandwidth for
+                collectives that cross pods).
+
+        Returns:
+            A fresh ``CostModel`` over the same (program, hardware) on
+            ``mesh``.
+        """
+        cm = object.__new__(CostModel)
+        cm.prog, cm.nda, cm.analysis = self.prog, self.nda, self.analysis
+        cm.mesh, cm.hw = mesh, self.hw
+        cm.use_site = self.use_site
+        cm.last_use = self.last_use
+        cm._baseline = None
+        cm._cache = {}
+        cm._suppressed_cache = self._suppressed_cache   # analysis-only
+        cm._info_cache = self._info_cache               # analysis-only
+        cm._axis_size = dict(zip(mesh.axes, mesh.sizes))
+        cm._axis_bw_map = dict(self.hw.axis_bw)
+        cm._tally = None
+        for name in _STATIC_TABLE_ATTRS:
+            setattr(cm, name, getattr(self, name))
+        # base rows are a function of hardware only: the unsharded state
+        # resolves every site to no axes, so no mesh lookup ever happens
+        cm.base_rows = self.base_rows
+        cm._base_totals = self._base_totals
         return cm
 
     # -- static tables (built once per Program × MeshSpec) -------------------

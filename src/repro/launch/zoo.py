@@ -34,6 +34,7 @@ is executed).
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import pathlib
 import time
@@ -43,7 +44,7 @@ from repro.api import Request, Session
 from repro.ckpt.plan_store import PlanStore
 from repro.configs import ARCH_IDS, get_config
 from repro.configs.base import ShapeConfig
-from repro.core.cost_model import HardwareSpec, MeshSpec
+from repro.core.cost_model import HardwareSpec, MeshSpec, ShardingState
 from repro.core.portfolio import PortfolioConfig, PortfolioMember
 from repro.core.search import BeamConfig
 from repro.launch.specs import step_and_inputs
@@ -324,6 +325,363 @@ def run_zoo(mesh: MeshSpec, *, archs: tuple[str, ...] | None = None,
     return record
 
 
+# -- mesh-shape co-search -----------------------------------------------------
+
+def fixed_2d_meshes(devices: int) -> list[MeshSpec]:
+    """The fixed 2-D baseline meshes for a device budget.
+
+    Every unordered two-factor split of ``devices`` spelled the
+    conventional way (``data`` × ``model``, largest axis first) — for 16
+    devices: ``16x1``, ``8x2``, ``4x4``.  These are the meshes a user
+    without co-search would pick by hand; ``--co-search`` reports its
+    winner against the best of them.
+
+    Args:
+        devices: total device count.
+
+    Returns:
+        Deduplicated ``MeshSpec`` list, largest leading axis first.
+    """
+    out: list[MeshSpec] = []
+    seen: set[tuple[int, int]] = set()
+    for a in range(devices, 0, -1):
+        if devices % a:
+            continue
+        b = devices // a
+        key = (max(a, b), min(a, b))
+        if key in seen:
+            continue
+        seen.add(key)
+        out.append(MeshSpec(("data", "model"), (max(a, b), min(a, b))))
+    return out
+
+
+def _mesh_str(mesh: MeshSpec) -> str:
+    return "x".join(str(s) for s in mesh.sizes)
+
+
+def cosearch_model(arch: str, devices: int, *,
+                   pods: tuple[int, ...] = (1, 2),
+                   shape: ShapeConfig = ZOO_SHAPE,
+                   hw: HardwareSpec = HardwareSpec(),
+                   backend: str = "portfolio",
+                   search_config=None,
+                   plan_store: PlanStore | None = None,
+                   min_dims: int = 10,
+                   measure: bool = False,
+                   repeats: int = 3,
+                   timeout: float = 600.0,
+                   verbose: bool = True) -> dict:
+    """Co-search the mesh shape and plan for one zoo model.
+
+    Runs :meth:`repro.api.Session.co_search` over every factorization of
+    the device budget, searches the fixed 2-D baseline meshes with the
+    same backend for comparison, and (optionally) validates the winner,
+    the best fixed plan and the best multi-pod candidate by measured
+    execution on simulated meshes — fitting a calibrated
+    ``HardwareSpec`` from the measured cells and re-costing every
+    candidate under it, so the record carries the ranking under both
+    default and calibrated hardware.
+
+    Args:
+        arch: config module name from ``repro.configs.ARCH_IDS``.
+        devices: total device budget ``N``.
+        pods: pod counts the enumerator may place across DCN.
+        shape: train cell to trace.
+        hw: default hardware roofline constants.
+        backend: per-mesh search backend.
+        search_config: backend-specific config.
+        plan_store: optional persistent plan cache (per-mesh keys).
+        min_dims: action-space pruning threshold.
+        measure: execute winner / best-fixed / best-multi-pod plans in
+            simulated-mesh subprocesses and calibrate from them.
+        repeats: timed executions per measured cell.
+        timeout: per-cell subprocess budget, seconds.
+        verbose: print per-candidate and per-cell progress lines.
+
+    Returns:
+        A JSON-friendly record: candidate rows, fixed-mesh rows, the
+        winner, ``ties_or_beats_fixed``, the best multi-pod candidate,
+        and (with ``measure``) measured cells plus the calibration
+        comparison.  ``row["status"]`` is "ok" or "error".
+    """
+    cfg = get_config(arch).reduced()
+    row: dict = {"model": arch, "family": cfg.family, "status": "ok",
+                 "devices": devices, "pods": list(pods)}
+    try:
+        fn, args, names = step_and_inputs(cfg, shape)
+        sess = Session(fn, args, plan_store=plan_store)
+        template = Request(
+            mesh=MeshSpec(("data", "model"), (1, 1)), hw=hw,
+            backend=backend, search_config=search_config,
+            min_dims=min_dims, logical_axes=names)
+        res = sess.co_search(template, devices, pods=pods,
+                             verbose=verbose)
+
+        fixed_rows: list[dict] = []
+        best_fixed: tuple | None = None
+        for mesh in fixed_2d_meshes(devices):
+            plan = sess.partition(dataclasses.replace(template,
+                                                      mesh=mesh))
+            feasible = bool(plan.breakdown["peak_bytes"]
+                            <= hw.hbm_per_chip)
+            frow = {"mesh_str": _mesh_str(mesh),
+                    "cost": round(plan.cost, 6), "feasible": feasible,
+                    "search_s": round(plan.search_seconds, 3),
+                    "cached": plan.cached}
+            fixed_rows.append(frow)
+            key = (not feasible, plan.cost)
+            if best_fixed is None or key < best_fixed[0]:
+                best_fixed = (key, mesh, plan)
+    except Exception as e:                          # noqa: BLE001
+        row.update(status="error", error=repr(e),
+                   traceback=traceback.format_exc(limit=5))
+        return row
+
+    winner_row = None
+    if res.best_mesh is not None:
+        want = res.best_mesh.as_dict()
+        winner_row = next(r for r in res.rows if r["mesh"] == want)
+    row.update(
+        candidates=res.rows,
+        analysis_s=round(sess.analysis_seconds, 3),
+        cosearch_s=round(res.seconds, 3),
+        fixed=fixed_rows,
+        winner=winner_row,
+        best_fixed=(None if best_fixed is None else
+                    {"mesh_str": _mesh_str(best_fixed[1]),
+                     "cost": round(best_fixed[2].cost, 6)}),
+        ties_or_beats_fixed=bool(
+            winner_row is not None and best_fixed is not None
+            and res.best_plan.cost <= best_fixed[2].cost + 1e-9),
+    )
+    mp = res.best_multi_pod()
+    row["multi_pod_best"] = None if mp is None else {
+        "mesh_str": _mesh_str(mp[0]), "cost": round(mp[1].cost, 6)}
+
+    if measure and res.best_mesh is not None:
+        row["measured"] = _measure_cosearch(
+            sess, template, res, best_fixed, arch, shape, hw,
+            repeats=repeats, timeout=timeout, verbose=verbose)
+    return row
+
+
+def _measure_cosearch(sess, template, res, best_fixed, arch, shape, hw,
+                      *, repeats: int, timeout: float,
+                      verbose: bool) -> dict:
+    """Measured validation of co-search winners + calibrated re-ranking."""
+    from repro.core.measure import fit_hardware
+    from repro.launch.measure import measure_plan
+
+    to_run: list[tuple[str, MeshSpec, object]] = [
+        ("winner", res.best_mesh, res.best_plan),
+        ("unsharded", res.best_mesh,
+         sess.plan_for_state(
+             dataclasses.replace(template, mesh=res.best_mesh),
+             ShardingState(), label="unsharded")),
+    ]
+    if best_fixed is not None and best_fixed[1] != res.best_mesh:
+        to_run.append(("best_fixed", best_fixed[1], best_fixed[2]))
+    mp = res.best_multi_pod()
+    if mp is not None and mp[0] != res.best_mesh:
+        to_run.append(("multi_pod_best", mp[0], mp[1]))
+
+    cells: list[dict] = []
+    for label, mesh, plan in to_run:
+        cm = sess._cost_model(mesh, hw)
+        feats = cm.state_features(plan.state)
+        r = measure_plan(arch, shape, plan, reduced=True,
+                         repeats=repeats, warmup=1, timeout=timeout)
+        cell = {"label": label, "mesh_str": _mesh_str(mesh),
+                "multi_pod": bool(mesh.dcn_axes),
+                "status": r.get("status", "error"),
+                "devices": r.get("devices", 0),
+                "predicted_s": feats["runtime"],
+                "measured_s": r.get("measured_s", 0.0),
+                "compile_s": r.get("compile_s", 0.0),
+                "runs_s": [round(x, 6) for x in r.get("runs_s", [])],
+                "error": r.get("error", ""),
+                "features": feats}
+        cells.append(cell)
+        if verbose:
+            print(f"[co-measure {arch:>14}/{label:<14}] "
+                  f"{cell['status']:<13} "
+                  f"measured={cell['measured_s'] * 1e3:8.2f}ms "
+                  f"({cell['mesh_str']})", flush=True)
+
+    out: dict = {"cells": cells}
+    ok = [c for c in cells if c["status"] == "ok"
+          and c["measured_s"] > 0.0]
+    if len(ok) >= 2:
+        axes: list[str] = []
+        for _, mesh, _ in to_run:
+            for a in mesh.axes:
+                if a not in axes:
+                    axes.append(a)
+        hw_cal = fit_hardware(
+            [{"features": c["features"], "measured_s": c["measured_s"]}
+             for c in ok], hw, tuple(axes))
+        out["hw_calibrated"] = hw_cal.as_dict()
+        # re-cost every searched candidate under the calibrated roofline
+        # (shared analysis, shared static tables — only base rows move)
+        best_cal: tuple | None = None
+        for r in res.rows:
+            if r.get("status") != "ok":
+                continue
+            mesh = MeshSpec(tuple(r["mesh"]["axes"]),
+                            tuple(r["mesh"]["sizes"]),
+                            tuple(r["mesh"]["dcn_axes"]))
+            cm_cal = sess._cost_model(mesh, hw).with_hardware(hw_cal)
+            cost_cal = cm_cal.paper_cost(res.plans[mesh].state)
+            r["cost_calibrated"] = round(cost_cal, 6)
+            key = (not r["feasible"], cost_cal)
+            if best_cal is None or key < best_cal[0]:
+                best_cal = (key, r["mesh_str"])
+        if best_cal is not None:
+            out["winner_calibrated"] = best_cal[1]
+            out["calibrated_agrees"] = bool(
+                res.best_mesh is not None
+                and best_cal[1] == _mesh_str(res.best_mesh))
+    # drop the bulky per-cell features from the persisted record
+    for c in cells:
+        c.pop("features", None)
+    return out
+
+
+def run_cosearch(devices: int, *, archs: tuple[str, ...],
+                 pods: tuple[int, ...] = (1, 2),
+                 shape: ShapeConfig | None = None,
+                 hw: HardwareSpec = HardwareSpec(),
+                 backend: str = "portfolio",
+                 search_config=None,
+                 plan_store: PlanStore | None = None,
+                 min_dims: int = 10,
+                 measure: bool = False,
+                 repeats: int = 3,
+                 timeout: float = 600.0,
+                 verbose: bool = True) -> dict:
+    """Mesh-shape co-search over several zoo models.
+
+    Args:
+        devices: total device budget ``N``.
+        archs: zoo configs to co-search.
+        pods: pod counts the enumerator may place across DCN.
+        shape: train cell (defaults to the small zoo cell).
+        hw: default hardware roofline constants.
+        backend: per-mesh search backend.
+        search_config: backend-specific config shared by all models.
+        plan_store: persistent plan cache.
+        min_dims: action-space pruning threshold.
+        measure: validate winners by measured execution + calibrate.
+        repeats: timed executions per measured cell.
+        timeout: per-cell subprocess budget, seconds.
+        verbose: print progress lines.
+
+    Returns:
+        The co-search record written to ``BENCH_meshsearch.json``;
+        ``record["failures"]`` lists models whose winner was infeasible
+        or lost to the best fixed 2-D mesh (the CI gate).
+    """
+    shape = shape or ZOO_SHAPE
+    if backend == "portfolio" and search_config is None:
+        search_config = zoo_portfolio()
+    t0 = time.perf_counter()
+    rows = []
+    failures = []
+    for arch in archs:
+        if verbose:
+            print(f"-- co-search {arch} over {devices} devices "
+                  f"(pods {','.join(map(str, pods))}) --", flush=True)
+        row = cosearch_model(
+            arch, devices, pods=pods, shape=shape, hw=hw,
+            backend=backend, search_config=search_config,
+            plan_store=plan_store, min_dims=min_dims, measure=measure,
+            repeats=repeats, timeout=timeout, verbose=verbose)
+        rows.append(row)
+        if row["status"] != "ok":
+            failures.append(f"{arch}: {row['error']}")
+        elif row["winner"] is None:
+            failures.append(f"{arch}: no candidate searched successfully")
+        elif not row["winner"]["feasible"]:
+            failures.append(f"{arch}: co-search winner is infeasible")
+        elif not row["ties_or_beats_fixed"]:
+            failures.append(
+                f"{arch}: winner cost {row['winner']['cost']} loses to "
+                f"fixed {row['best_fixed']['mesh_str']} "
+                f"({row['best_fixed']['cost']})")
+    return {
+        "devices": devices,
+        "pods": list(pods),
+        "shape": {"seq_len": shape.seq_len,
+                  "global_batch": shape.global_batch,
+                  "kind": shape.kind},
+        "backend": backend,
+        "results": rows,
+        "failures": failures,
+        "total_seconds": round(time.perf_counter() - t0, 2),
+    }
+
+
+_COSEARCH_COLUMNS = ("mesh", "dcn", "status", "cost", "cost_cal",
+                     "feasible", "peak_gb", "bound_gb", "search_s",
+                     "cached")
+
+
+def format_cosearch_table(row: dict) -> str:
+    """Render one model's co-search candidate rows as an aligned table.
+
+    Args:
+        row: a per-model record from :func:`cosearch_model`.
+
+    Returns:
+        A printable multi-line table string (candidates then the fixed
+        2-D baselines and winner summary).
+    """
+    def cell(r, col):
+        if col == "mesh":
+            return r.get("mesh_str", "-")
+        if col == "dcn":
+            return "dcn" if r.get("multi_pod") else "-"
+        if col == "cost_cal":
+            v = r.get("cost_calibrated")
+            return "-" if v is None else f"{v:.4f}"
+        if col == "peak_gb":
+            v = r.get("peak_gb")
+            return "-" if v is None else f"{v:.4f}"
+        if col == "bound_gb":
+            v = r.get("peak_lower_bound_gb")
+            return "-" if v is None else f"{v:.4f}"
+        v = r.get(col, "-")
+        if isinstance(v, bool):
+            return "yes" if v else "NO"
+        if isinstance(v, float):
+            return f"{v:.4f}" if col == "cost" else f"{v:.2f}"
+        return str(v)
+
+    table = [list(_COSEARCH_COLUMNS)]
+    table += [[cell(r, c) for c in _COSEARCH_COLUMNS]
+              for r in row.get("candidates", [])]
+    widths = [max(len(r[i]) for r in table)
+              for i in range(len(_COSEARCH_COLUMNS))]
+    lines = [f"[{row['model']}] co-search over {row['devices']} devices"]
+    for j, r in enumerate(table):
+        lines.append("  ".join(c.rjust(w) for c, w in zip(r, widths)))
+        if j == 0:
+            lines.append("  ".join("-" * w for w in widths))
+    fixed = ", ".join(f"{f['mesh_str']}={f['cost']:.4f}"
+                      for f in row.get("fixed", []))
+    lines.append(f"fixed 2-D: {fixed}")
+    if row.get("winner") is not None:
+        verdict = ("ties/beats" if row["ties_or_beats_fixed"]
+                   else "LOSES TO")
+        lines.append(
+            f"winner: {row['winner']['mesh_str']} "
+            f"cost={row['winner']['cost']:.4f} {verdict} best fixed "
+            f"{row['best_fixed']['mesh_str']}="
+            f"{row['best_fixed']['cost']:.4f}")
+    return "\n".join(lines)
+
+
 _COLUMNS = ("model", "family", "ops", "colors", "conflicts",
             "resolution_bits", "feasible", "cost", "speedup", "peak_gb",
             "search_s", "evaluations", "winner", "cached")
@@ -441,6 +799,20 @@ def main(argv: list[str] | None = None) -> dict:
                     help="price plans with the calibrated HardwareSpec "
                          "saved in the plan store by a previous "
                          "--measure run")
+    ap.add_argument("--co-search", type=int, default=None, metavar="N",
+                    help="mesh-shape co-search: enumerate every mesh "
+                         "factorization of N devices (instead of "
+                         "--mesh), search each, and compare the winner "
+                         "against the best fixed 2-D mesh")
+    ap.add_argument("--pods", default="1,2",
+                    help="comma-separated pod counts for --co-search; "
+                         "counts > 1 add a DCN-crossing 'pod' axis")
+    ap.add_argument("--co-measure", action="store_true",
+                    help="with --co-search: validate the winner, the "
+                         "best fixed plan and the best multi-pod "
+                         "candidate by measured execution, then "
+                         "calibrate and re-rank")
+    ap.add_argument("--cosearch-out", default="BENCH_meshsearch.json")
     args = ap.parse_args(argv)
 
     try:
@@ -468,6 +840,41 @@ def main(argv: list[str] | None = None) -> dict:
     shape = None
     if args.smoke:
         shape = ZOO_SHAPE_SMOKE
+
+    if args.co_search is not None:
+        try:
+            pods = tuple(int(p) for p in args.pods.split(","))
+        except ValueError:
+            ap.error(f"bad --pods {args.pods!r}: expected "
+                     f"comma-separated integers, e.g. '1,2'")
+        record = run_cosearch(
+            args.co_search, archs=archs, pods=pods, shape=shape, hw=hw,
+            backend=args.backend, search_config=search_config,
+            plan_store=store, min_dims=args.min_dims,
+            measure=args.co_measure, repeats=args.measure_repeats,
+            timeout=args.measure_timeout)
+        print()
+        for row in record["results"]:
+            if row["status"] == "ok":
+                print(format_cosearch_table(row))
+                m = row.get("measured")
+                if m and "winner_calibrated" in m:
+                    agree = ("agrees" if m["calibrated_agrees"]
+                             else "DISAGREES")
+                    print(f"calibrated winner: "
+                          f"{m['winner_calibrated']} ({agree} with the "
+                          f"default-hardware winner)")
+                print()
+            else:
+                print(f"[{row['model']}] ERROR {row['error']}\n")
+        out = pathlib.Path(args.cosearch_out)
+        out.write_text(json.dumps(record, indent=2))
+        print(f"wrote {out} ({record['total_seconds']}s)")
+        if record["failures"]:
+            for f in record["failures"]:
+                print(f"CO-SEARCH FAILED {f}")
+            raise SystemExit(1)
+        return record
     captures: dict | None = {} if args.measure else None
     profiler = None
     if args.profile:

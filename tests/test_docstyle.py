@@ -26,6 +26,7 @@ DOC_GATED_FILES = [
     "src/repro/launch/zoo.py",
     "src/repro/core/measure.py",
     "src/repro/launch/measure.py",
+    "src/repro/core/mesh_search.py",
 ]
 
 RULES = "D101,D102,D103,D417"

@@ -316,6 +316,82 @@ class TestPlanKeyStability:
                            HardwareSpec(axis_bw=(("data", 1e9),))) != base
 
 
+class TestMultiPodFit:
+    """fit_hardware must recover a *lower* DCN than ICI bandwidth from
+    synthetic multi-pod cells — the calibration path the mesh-shape
+    co-search relies on to rank pod-crossing candidates."""
+
+    HW_TRUE = HardwareSpec(flops_per_chip=4e10, hbm_bw=8e9,
+                           coll_latency=5e-6,
+                           axis_bw=(("data", 2e9), ("pod", 1e8)))
+
+    def _cells(self, n=14, seed=3):
+        import numpy as np
+        rng = np.random.RandomState(seed)
+        cells = []
+        for _ in range(n):
+            f = {
+                "flops": float(rng.uniform(1e8, 5e9)),
+                "hbm_bytes": float(rng.uniform(1e7, 5e8)),
+                "coll_bytes": {"data": float(rng.uniform(0, 4e7)),
+                               "pod": float(rng.uniform(0, 2e7))},
+                "coll_count": float(rng.randint(0, 200)),
+            }
+            cells.append({"features": f,
+                          "measured_s": linear_predict(f, self.HW_TRUE)})
+        return cells
+
+    def test_recovers_pod_slower_than_ici(self):
+        fit = fit_hardware(self._cells(), HardwareSpec(),
+                           ("data", "pod"))
+        bw = dict(fit.axis_bw)
+        assert bw["pod"] == pytest.approx(1e8, rel=1e-6)
+        assert bw["data"] == pytest.approx(2e9, rel=1e-6)
+        assert bw["pod"] < bw["data"]
+
+    def test_calibrated_spec_prices_dcn_axis(self, mlp_art):
+        """A cost model under the fitted spec uses the per-axis override
+        for the pod axis — not the ici/dcn defaults."""
+        fit = fit_hardware(self._cells(), HardwareSpec(),
+                           ("data", "pod"))
+        mesh = MeshSpec(("pod", "data"), (2, 8), dcn_axes=("pod",))
+        cm = CostModel(mlp_art.prog, mlp_art.nda, mlp_art.analysis,
+                       mesh, fit)
+        assert cm._axis_bw("pod") == pytest.approx(1e8, rel=1e-6)
+        assert cm._axis_bw("data") == pytest.approx(2e9, rel=1e-6)
+
+
+class TestMultiPodMeasure:
+    """One real multi-pod cell: search a plan on a pod=2 x data=2 mesh
+    and execute it on a 4-device simulated mesh — the DCN-marked axis
+    must run (XLA has no DCN notion; the marking is cost-model-side)."""
+
+    @pytest.mark.slow
+    def test_end_to_end(self):
+        from repro.api import Request, Session
+        from repro.configs import get_config
+        from repro.configs.base import ShapeConfig
+        from repro.launch.measure import measure_plan
+        from repro.launch.specs import step_and_inputs
+
+        cfg = get_config("qwen2_05b").reduced()
+        shape = ShapeConfig("measure_test", 32, 4, "train")
+        fn, args, names = step_and_inputs(cfg, shape)
+        sess = Session(fn, args)
+        mesh = MeshSpec(("pod", "data"), (2, 2), dcn_axes=("pod",))
+        req = Request(mesh=mesh, backend="greedy",
+                      search_config=BeamConfig(max_depth=3, patience=1),
+                      logical_axes=names)
+        plan = sess.partition(req)
+        assert plan.mesh.dcn_axes == ("pod",)
+        res = measure_plan("qwen2_05b", shape, plan, repeats=2, warmup=1,
+                           timeout=600)
+        assert res["status"] == "ok", res
+        assert res["devices"] == 4
+        assert res["measured_s"] > 0
+        assert all(t > 0 for t in res["runs_s"])
+
+
 class TestMeasureWorker:
     """One real measurement: search a tiny plan, execute it in a
     subprocess on a 2-device simulated mesh, check the result record."""

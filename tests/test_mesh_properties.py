@@ -1,0 +1,161 @@
+"""Property-based tests (hypothesis) on mesh parsing and validation.
+
+``zoo.parse_mesh`` and ``MeshSpec.__post_init__`` are the two gates all
+user-supplied mesh shapes pass through; random well-formed specs must
+round-trip and random malformed ones must raise ``ValueError`` (never a
+traceback-through-the-stack ``TypeError``/``IndexError``).  The mesh
+enumerator's candidates must all multiply to the device budget and be
+distinct up to axis renaming.
+"""
+
+import pytest
+
+pytest.importorskip("hypothesis")  # optional test extra; see pyproject.toml
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cost_model import MeshSpec
+from repro.core.mesh_search import enumerate_meshes, factorizations
+from repro.launch.zoo import _AXIS_NAMES, parse_mesh
+
+SIZES = st.lists(st.integers(min_value=1, max_value=64), min_size=1,
+                 max_size=4)
+
+
+class TestParseMeshProperties:
+    @settings(max_examples=50, deadline=None)
+    @given(sizes=SIZES)
+    def test_round_trip(self, sizes):
+        spec = "x".join(str(s) for s in sizes)
+        mesh = parse_mesh(spec)
+        assert mesh.sizes == tuple(sizes)
+        assert mesh.axes == _AXIS_NAMES[len(sizes)]
+        assert "x".join(str(s) for s in mesh.sizes) == spec
+        # the pod axis, and only the pod axis, crosses DCN
+        assert mesh.dcn_axes == (("pod",) if "pod" in mesh.axes else ())
+
+    @settings(max_examples=50, deadline=None)
+    @given(sizes=SIZES, case=st.sampled_from(["lower", "upper", "pad"]))
+    def test_insensitive_to_case_and_whitespace(self, sizes, case):
+        spec = "x".join(str(s) for s in sizes)
+        spec = {"lower": spec, "upper": spec.upper(),
+                "pad": f"  {spec} "}[case]
+        assert parse_mesh(spec).sizes == tuple(sizes)
+
+    @settings(max_examples=50, deadline=None)
+    @given(sizes=st.lists(st.integers(min_value=-8, max_value=0),
+                          min_size=1, max_size=4))
+    def test_nonpositive_sizes_rejected(self, sizes):
+        spec = "x".join(str(s) for s in sizes)
+        with pytest.raises(ValueError, match=">= 1"):
+            parse_mesh(spec)
+
+    @settings(max_examples=50, deadline=None)
+    @given(sizes=st.lists(st.integers(min_value=1, max_value=8),
+                          min_size=5, max_size=8))
+    def test_too_many_axes_rejected(self, sizes):
+        with pytest.raises(ValueError, match="axes"):
+            parse_mesh("x".join(str(s) for s in sizes))
+
+    @settings(max_examples=50, deadline=None)
+    @given(junk=st.text(alphabet="abcxyz-_.,:;*/ ",
+                        min_size=1).filter(lambda s: s.strip()))
+    def test_non_numeric_specs_rejected(self, junk):
+        # no token of a digit-free spec can parse as an integer
+        with pytest.raises(ValueError):
+            parse_mesh(junk)
+
+    @settings(max_examples=30, deadline=None)
+    @given(sizes=st.lists(st.integers(min_value=1, max_value=8),
+                          min_size=1, max_size=3))
+    def test_trailing_separator_rejected(self, sizes):
+        spec = "x".join(str(s) for s in sizes) + "x"
+        with pytest.raises(ValueError, match="positive"):
+            parse_mesh(spec)
+
+
+NAME = st.text(alphabet="abcdefgh", min_size=1, max_size=4)
+
+
+class TestMeshSpecProperties:
+    @settings(max_examples=50, deadline=None)
+    @given(names=st.lists(NAME, min_size=1, max_size=4, unique=True),
+           data=st.data())
+    def test_valid_specs_construct(self, names, data):
+        sizes = tuple(data.draw(st.integers(1, 32)) for _ in names)
+        dcn = tuple(n for n in names if data.draw(st.booleans()))
+        mesh = MeshSpec(tuple(names), sizes, dcn_axes=dcn)
+        prod = 1
+        for s in sizes:
+            prod *= s
+        assert mesh.num_devices == prod
+        assert set(mesh.dcn_axes) <= set(mesh.axes)
+        for n, s in zip(names, sizes):
+            assert mesh.size(n) == s
+
+    @settings(max_examples=50, deadline=None)
+    @given(names=st.lists(NAME, min_size=1, max_size=4, unique=True),
+           data=st.data())
+    def test_nonpositive_size_rejected(self, names, data):
+        sizes = [data.draw(st.integers(1, 8)) for _ in names]
+        idx = data.draw(st.integers(0, len(names) - 1))
+        sizes[idx] = data.draw(st.integers(-4, 0))
+        with pytest.raises(ValueError):
+            MeshSpec(tuple(names), tuple(sizes))
+
+    @settings(max_examples=50, deadline=None)
+    @given(names=st.lists(NAME, min_size=1, max_size=3, unique=True),
+           extra=st.integers(1, 3))
+    def test_length_mismatch_rejected(self, names, extra):
+        sizes = tuple([2] * (len(names) + extra))
+        with pytest.raises(ValueError):
+            MeshSpec(tuple(names), sizes)
+        with pytest.raises(ValueError):
+            MeshSpec(tuple(names) + tuple(names), sizes)
+
+    @settings(max_examples=50, deadline=None)
+    @given(names=st.lists(NAME, min_size=1, max_size=3, unique=True),
+           dup=st.integers(0, 2))
+    def test_duplicate_names_rejected(self, names, dup):
+        dup = dup % len(names)
+        axes = tuple(names) + (names[dup],)
+        with pytest.raises(ValueError):
+            MeshSpec(axes, tuple([2] * len(axes)))
+
+    @settings(max_examples=50, deadline=None)
+    @given(names=st.lists(NAME, min_size=1, max_size=3, unique=True),
+           alien=NAME)
+    def test_dcn_axes_must_be_subset(self, names, alien):
+        if alien in names:
+            return
+        with pytest.raises(ValueError, match="dcn_axes"):
+            MeshSpec(tuple(names), tuple([2] * len(names)),
+                     dcn_axes=(alien,))
+
+
+class TestEnumerationProperties:
+    @settings(max_examples=40, deadline=None)
+    @given(n=st.integers(1, 256))
+    def test_factorizations_exact(self, n):
+        facs = factorizations(n)
+        assert len(set(facs)) == len(facs)
+        for f in facs:
+            prod = 1
+            for x in f:
+                prod *= x
+            assert prod == n
+            assert all(x >= 2 for x in f)
+            assert list(f) == sorted(f, reverse=True)
+
+    @settings(max_examples=40, deadline=None)
+    @given(devices=st.integers(1, 128),
+           pods=st.lists(st.integers(1, 8), min_size=1, max_size=3))
+    def test_enumerated_meshes_are_valid_and_distinct(self, devices,
+                                                      pods):
+        meshes = enumerate_meshes(devices, pods=tuple(pods))
+        assert len(set(meshes)) == len(meshes)
+        for m in meshes:
+            assert m.num_devices == devices
+            assert set(m.dcn_axes) <= set(m.axes)
+            # dedup up to renaming: sizes already canonical per pod split
+            ici = tuple(s for a, s in zip(m.axes, m.sizes) if a != "pod")
+            assert list(ici) == sorted(ici, reverse=True)

@@ -1,0 +1,376 @@
+"""Mesh-shape co-search tests: factorization enumeration, dedup,
+memory-bound pruning, with_mesh exactness against fresh cost models,
+DCN cost conformance, and Session.co_search end-to-end on a small MLP."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.api import Request, Session
+from repro.core.cost_model import (CostModel, HardwareSpec, MeshSpec,
+                                   ShardingState)
+from repro.core.mesh_search import (MeshCandidate, candidate_meshes,
+                                    enumerate_meshes, factorizations,
+                                    mesh_for_factors, peak_lower_bound,
+                                    usable_shard_factor)
+from repro.core.partitioner import analyze
+from repro.core.search import BeamConfig
+
+
+def sh(*s):
+    return jax.ShapeDtypeStruct(s, jnp.float32)
+
+
+def mlp(x, w1, w2):
+    return jax.nn.relu(x @ w1) @ w2
+
+
+MLP_ARGS = (sh(1024, 512), sh(512, 2048), sh(2048, 512))
+
+
+@pytest.fixture(scope="module")
+def mlp_art():
+    return analyze(mlp, MLP_ARGS)
+
+
+class TestFactorizations:
+    def test_sixteen(self):
+        assert factorizations(16) == [(16,), (8, 2), (4, 4), (4, 2, 2)]
+
+    def test_twelve(self):
+        assert factorizations(12) == [(12,), (6, 2), (4, 3), (3, 2, 2)]
+
+    def test_one_is_empty_tuple(self):
+        assert factorizations(1) == [()]
+
+    def test_prime(self):
+        assert factorizations(7) == [(7,)]
+
+    def test_max_factors_limits_length(self):
+        assert factorizations(16, max_factors=2) == [(16,), (8, 2), (4, 4)]
+        assert all(len(f) <= 1 for f in factorizations(16, max_factors=1))
+
+    def test_nonpositive_raises(self):
+        with pytest.raises(ValueError, match="non-positive"):
+            factorizations(0)
+
+    @pytest.mark.parametrize("n", [2, 6, 16, 24, 36, 60])
+    def test_invariants(self, n):
+        facs = factorizations(n)
+        assert len(set(facs)) == len(facs)          # no duplicates
+        for f in facs:
+            prod = 1
+            for x in f:
+                prod *= x
+            assert prod == n
+            assert all(x >= 2 for x in f)
+            assert list(f) == sorted(f, reverse=True)   # canonical
+
+
+class TestEnumerateMeshes:
+    def test_single_pod_sixteen(self):
+        meshes = enumerate_meshes(16)
+        strs = ["x".join(map(str, m.sizes)) for m in meshes]
+        assert strs == ["16", "8x2", "4x4", "4x2x2"]
+        assert all(not m.dcn_axes for m in meshes)
+
+    def test_multi_pod_adds_dcn_axis(self):
+        meshes = enumerate_meshes(16, pods=(1, 2))
+        multi = [m for m in meshes if m.dcn_axes]
+        assert len(meshes) == 7                     # 4 single + 3 dual-pod
+        assert all(m.axes[0] == "pod" and m.sizes[0] == 2
+                   and m.dcn_axes == ("pod",) for m in multi)
+        assert all(m.num_devices == 16 for m in meshes)
+
+    def test_non_divisor_pods_skipped(self):
+        assert enumerate_meshes(8, pods=(3,)) == []
+        assert enumerate_meshes(8, pods=(1, 3)) == enumerate_meshes(8)
+
+    def test_degenerate_single_device(self):
+        assert enumerate_meshes(1) == [MeshSpec(("model",), (1,))]
+
+    def test_bad_budget_raises(self):
+        with pytest.raises(ValueError, match="device budget"):
+            enumerate_meshes(0)
+
+    def test_bad_max_ici_axes_raises(self):
+        with pytest.raises(ValueError, match="max_ici_axes"):
+            enumerate_meshes(8, max_ici_axes=4)
+
+    def test_dedup_up_to_renaming(self):
+        # one candidate per multiset of sizes: no 2x8 next to 8x2
+        meshes = enumerate_meshes(64, pods=(1, 2, 4))
+        seen = set()
+        for m in meshes:
+            key = (m.dcn_axes, tuple(sorted(
+                s for a, s in zip(m.axes, m.sizes) if a != "pod")),
+                m.sizes[0] if m.dcn_axes else 1)
+            assert key not in seen, m
+            seen.add(key)
+
+    def test_pod_axis_named_per_convention(self):
+        m = mesh_for_factors((4, 2), pod=2)
+        assert m.axes == ("pod", "data", "model")
+        assert m.dcn_axes == ("pod",)
+
+
+class TestPruning:
+    def test_usable_shard_factor_divisibility(self):
+        mesh = MeshSpec(("data", "model"), (4, 3))
+        # dims 8,16: 4 divides both, 3 divides neither -> factor 4
+        assert usable_shard_factor(mesh, {8, 16}) == 4
+        assert usable_shard_factor(mesh, {12}) == 12
+        assert usable_shard_factor(mesh, {5, 7}) == 1
+
+    def test_size_one_axes_ignored(self):
+        mesh = MeshSpec(("data", "model"), (1, 2))
+        assert usable_shard_factor(mesh, {8}) == 2
+
+    def test_peak_lower_bound_divides_base(self):
+        mesh = MeshSpec(("data", "model"), (4, 2))
+        assert peak_lower_bound(mesh, {8}, 64.0) == pytest.approx(8.0)
+
+    def test_candidate_meshes_prunes_on_budget(self):
+        # base peak 64 bytes over meshes of 8 devices; budget 10 bytes
+        # prunes any candidate whose usable factor < 8 (bound > 10)
+        cands = candidate_meshes(8, dim_sizes={8}, base_peak=64.0,
+                                 memory_budget=10.0)
+        by_str = {c.mesh_str: c for c in cands}
+        assert not by_str["8"].pruned               # 64/8 = 8 <= 10
+        assert not by_str["4x2"].pruned             # 64/8 = 8 <= 10
+        assert not by_str["2x2x2"].pruned           # 64/8 = 8 <= 10
+        # a dim set where only one axis is usable prunes the rest
+        cands = candidate_meshes(8, dim_sizes={2}, base_peak=64.0,
+                                 memory_budget=16.0)
+        by_str = {c.mesh_str: c for c in cands}
+        assert by_str["8"].pruned                   # 8 ∤ 2 → bound 64
+        assert not by_str["2x2x2"].pruned           # 2·2·2 usable → 8
+
+    def test_no_program_info_no_bound(self):
+        cands = candidate_meshes(8)
+        assert all(c.peak_lower_bound is None and not c.pruned
+                   for c in cands)
+
+    def test_bound_is_a_true_lower_bound(self, mlp_art):
+        """No searched plan's peak may undercut the replicated bound."""
+        from repro.core.actions import build_action_space
+        from repro.core.evaluator import IncrementalEvaluator
+        from repro.core.search import get_backend
+        dim_sizes = {d for t in mlp_art.prog.types.values()
+                     for d in t.shape}
+        for mesh in enumerate_meshes(8, pods=(1, 2)):
+            cm = CostModel(mlp_art.prog, mlp_art.nda, mlp_art.analysis,
+                           mesh)
+            bound = peak_lower_bound(mesh, dim_sizes, cm._base_peak)
+            actions = build_action_space(mlp_art.nda, mlp_art.analysis,
+                                         mesh, min_dims=1)
+            res = get_backend("beam").search(
+                IncrementalEvaluator(cm), actions,
+                BeamConfig(width=4, patience=1))
+            peak = cm.evaluate(res.best_state).peak_bytes
+            assert peak >= bound - 1e-6, mesh
+
+
+class TestMeshCandidate:
+    def test_mesh_str(self):
+        c = MeshCandidate(MeshSpec(("pod", "data"), (2, 4),
+                                   dcn_axes=("pod",)))
+        assert c.mesh_str == "2x4"
+        assert c.peak_lower_bound is None
+        assert not c.pruned
+
+
+class TestWithMesh:
+    """CostModel.with_mesh clones must price states exactly like a
+    freshly built model on the new mesh — including DCN meshes."""
+
+    MESHES = (
+        MeshSpec(("data", "model"), (4, 4)),
+        MeshSpec(("model",), (8,)),
+        MeshSpec(("pod", "data", "model"), (2, 2, 2),
+                 dcn_axes=("pod",)),
+    )
+
+    def _searched_state(self, art, mesh):
+        from repro.core.actions import build_action_space
+        from repro.core.evaluator import IncrementalEvaluator
+        from repro.core.search import get_backend
+        cm = CostModel(art.prog, art.nda, art.analysis, mesh)
+        actions = build_action_space(art.nda, art.analysis, mesh,
+                                     min_dims=1)
+        res = get_backend("beam").search(
+            IncrementalEvaluator(cm), actions,
+            BeamConfig(width=4, patience=1))
+        return res.best_state
+
+    @pytest.mark.parametrize("mesh", MESHES,
+                             ids=lambda m: "x".join(map(str, m.sizes)))
+    def test_matches_fresh_model(self, mlp_art, mesh):
+        base = CostModel(mlp_art.prog, mlp_art.nda, mlp_art.analysis,
+                         MeshSpec(("data", "model"), (2, 2)))
+        clone = base.with_mesh(mesh)
+        fresh = CostModel(mlp_art.prog, mlp_art.nda, mlp_art.analysis,
+                          mesh)
+        for state in (ShardingState(),
+                      self._searched_state(mlp_art, mesh)):
+            a = clone.evaluate(state).as_dict()
+            b = fresh.evaluate(state).as_dict()
+            for k in a:
+                assert a[k] == pytest.approx(b[k], rel=1e-12), (mesh, k)
+            assert clone.paper_cost(state) == \
+                pytest.approx(fresh.paper_cost(state), rel=1e-12)
+
+    def test_does_not_mutate_original(self, mlp_art):
+        mesh0 = MeshSpec(("data", "model"), (2, 2))
+        base = CostModel(mlp_art.prog, mlp_art.nda, mlp_art.analysis,
+                         mesh0)
+        state = self._searched_state(mlp_art, mesh0)
+        before = base.evaluate(state).as_dict()
+        base.with_mesh(self.MESHES[0]).evaluate(state)
+        assert base.evaluate(state).as_dict() == before
+        assert base.mesh == mesh0
+
+    def test_composes_with_hardware(self, mlp_art):
+        hw2 = HardwareSpec(flops_per_chip=5e10, ici_bw=1e9)
+        mesh = self.MESHES[2]
+        base = CostModel(mlp_art.prog, mlp_art.nda, mlp_art.analysis,
+                         MeshSpec(("data", "model"), (2, 2)))
+        a = base.with_mesh(mesh).with_hardware(hw2)
+        b = CostModel(mlp_art.prog, mlp_art.nda, mlp_art.analysis, mesh,
+                      hw2)
+        state = self._searched_state(mlp_art, mesh)
+        assert a.paper_cost(state) == \
+            pytest.approx(b.paper_cost(state), rel=1e-12)
+
+
+class TestDcnConformance:
+    """A collective over a DCN axis must cost at least as much as the
+    same collective over an equal-size ICI axis, and per-axis axis_bw
+    overrides must take precedence over both defaults."""
+
+    ICI = MeshSpec(("data", "model"), (4, 2))
+    DCN = MeshSpec(("data", "model"), (4, 2), dcn_axes=("data",))
+
+    def _models(self, mlp_art, hw=HardwareSpec()):
+        mk = lambda m: CostModel(mlp_art.prog, mlp_art.nda,  # noqa: E731
+                                 mlp_art.analysis, m, hw)
+        return mk(self.ICI), mk(self.DCN)
+
+    def test_axis_bw_resolution_order(self, mlp_art):
+        hw = HardwareSpec(ici_bw=50e9, dcn_bw=6.25e9,
+                          axis_bw=(("data", 1e9),))
+        ici, dcn = self._models(mlp_art, hw)
+        # override beats both defaults
+        assert ici._axis_bw("data") == 1e9
+        assert dcn._axis_bw("data") == 1e9
+        # no override: dcn membership decides
+        assert ici._axis_bw("model") == 50e9
+        assert dcn._axis_bw("model") == 50e9
+        assert CostModel(mlp_art.prog, mlp_art.nda, mlp_art.analysis,
+                         MeshSpec(("data", "model"), (4, 2),
+                                  dcn_axes=("model",)),
+                         hw)._axis_bw("model") == 6.25e9
+
+    @pytest.mark.parametrize("kind", ["all_reduce", "all_gather",
+                                      "reduce_scatter", "all_to_all"])
+    def test_dcn_collective_at_least_ici(self, mlp_art, kind):
+        ici, dcn = self._models(mlp_art)
+        nbytes = 1 << 20
+        assert dcn._collective(kind, nbytes, ("data",)) >= \
+            ici._collective(kind, nbytes, ("data",))
+        # the non-DCN axis is unaffected
+        assert dcn._collective(kind, nbytes, ("model",)) == \
+            pytest.approx(ici._collective(kind, nbytes, ("model",)))
+
+    def test_sharded_state_costs_more_on_dcn(self, mlp_art):
+        """End to end: any state that communicates over the dcn axis
+        gets a >= runtime under the DCN mesh."""
+        ici, dcn = self._models(mlp_art)
+        found_comm = False
+        for color in range(3):
+            state = ShardingState(((color, ("data",)),), ())
+            try:
+                a = ici.evaluate_dense(state)
+                b = dcn.evaluate_dense(state)
+            except ValueError:
+                continue
+            assert b.collective_time >= a.collective_time - 1e-18
+            if a.comm_bytes > 0:
+                found_comm = True
+                assert b.collective_time > a.collective_time
+        assert found_comm, "no evaluated state communicated over 'data'"
+
+
+class TestCoSearch:
+    HW = HardwareSpec()
+
+    @pytest.fixture(scope="class")
+    def sess(self):
+        return Session(mlp, MLP_ARGS)
+
+    @pytest.fixture(scope="class")
+    def template(self):
+        return Request(mesh=MeshSpec(("data", "model"), (1, 1)),
+                       backend="beam",
+                       search_config=BeamConfig(width=4, patience=1),
+                       min_dims=1)
+
+    def test_returns_best_over_candidates(self, sess, template):
+        res = sess.co_search(template, 8, pods=(1, 2))
+        assert res.devices == 8
+        assert res.best_mesh is not None
+        assert res.best_mesh.num_devices == 8
+        ok = [r for r in res.rows if r["status"] == "ok"]
+        assert ok and res.best_plan.cost == \
+            pytest.approx(min(r["cost"] for r in ok), abs=1e-6)
+        # winner is the feasible-first argmin of its own rows
+        want = res.best_mesh.as_dict()
+        row = next(r for r in res.rows if r["mesh"] == want)
+        assert row["feasible"]
+
+    def test_rows_cover_every_candidate(self, sess, template):
+        res = sess.co_search(template, 8, pods=(1, 2))
+        assert len(res.rows) == len(res.candidates) == 5
+        assert {r["mesh_str"] for r in res.rows} == \
+            {c.mesh_str for c in res.candidates}
+        for r in res.rows:
+            assert r["status"] in ("ok", "pruned", "error")
+            if r["status"] == "ok":
+                assert r["peak_lower_bound_gb"] <= r["peak_gb"] + 1e-9
+
+    def test_best_multi_pod(self, sess, template):
+        res = sess.co_search(template, 8, pods=(1, 2))
+        mp = res.best_multi_pod()
+        assert mp is not None
+        mesh, plan = mp
+        assert mesh.dcn_axes == ("pod",)
+        assert plan is res.plans[mesh]
+        # single-pod-only search has no multi-pod best
+        assert sess.co_search(template, 8,
+                              pods=(1,)).best_multi_pod() is None
+
+    def test_shares_one_analysis(self, sess, template):
+        """All candidate cost models must be with_mesh clones of one
+        base per HardwareSpec — sharing the static tables is the point."""
+        sess2 = Session(mlp, MLP_ARGS)
+        sess2.co_search(template, 8, pods=(1, 2))
+        base = sess2._hw_base_models[template.hw]
+        assert len(sess2._hw_base_models) == 1
+        for cm in sess2._cost_models.values():
+            assert cm._op_specs is base._op_specs
+            assert cm.base_rows is base.base_rows
+
+    def test_no_candidates_raises(self, sess, template):
+        with pytest.raises(ValueError, match="no candidate meshes"):
+            sess.co_search(template, 8, pods=(3,))
+
+    def test_infeasible_budget_prunes(self, sess, template):
+        """A absurdly small memory budget prunes every candidate; the
+        result degrades gracefully instead of crashing."""
+        tiny = dataclasses.replace(
+            template, hw=HardwareSpec(hbm_per_chip=1.0))
+        res = sess.co_search(tiny, 8, pods=(1, 2))
+        assert res.best_mesh is None and res.best_plan is None
+        assert all(r["status"] == "pruned" for r in res.rows)

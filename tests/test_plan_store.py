@@ -252,6 +252,51 @@ class TestKeySchemaV2:
         assert k != plan_key_v2("a" * 64, MESH, None, {"min_dims": 2})
         assert k != plan_key("a" * 64, MESH)     # schemas never collide
 
+    def test_dcn_axes_key_distinctly(self):
+        """Regression (mesh-shape co-search): two meshes with identical
+        shapes but different DCN membership are different hardware — the
+        same 4x2 over one pod vs over two pods must never serve each
+        other's plans."""
+        ici = MeshSpec(("data", "model"), (4, 2))
+        dcn = MeshSpec(("data", "model"), (4, 2), dcn_axes=("data",))
+        dcn2 = MeshSpec(("data", "model"), (4, 2), dcn_axes=("model",))
+        keys = {plan_key_v2("a" * 64, m) for m in (ici, dcn, dcn2)}
+        assert len(keys) == 3
+        # axis *names* distinguish too (pod=2 x model=4 vs data=2 x ...)
+        pod = MeshSpec(("pod", "model"), (2, 4), dcn_axes=("pod",))
+        flat = MeshSpec(("data", "model"), (2, 4))
+        assert plan_key_v2("a" * 64, pod) != plan_key_v2("a" * 64, flat)
+
+    def test_dcn_mesh_store_miss_not_collision(self, mlp_plan, tmp_path):
+        """End-to-end: a plan stored under the ICI mesh must be a miss
+        for the DCN-marked mesh of the same shape."""
+        store = PlanStore(tmp_path)
+        plan = ShardingPlan.from_json(mlp_plan.to_json())
+        plan.fingerprint = "d" * 64
+        store.put(plan)
+        hit = store.get("d" * 64, plan.mesh)
+        assert hit is not None
+        dcn_mesh = MeshSpec(plan.mesh.axes, plan.mesh.sizes,
+                            dcn_axes=(plan.mesh.axes[0],))
+        assert store.get("d" * 64, dcn_mesh) is None
+
+    def test_dcn_axes_round_trip_through_plan_json(self, mlp_plan,
+                                                   tmp_path):
+        """to_json/from_json and the store itself must preserve
+        dcn_axes — a reloaded multi-pod plan prices DCN collectives."""
+        plan = ShardingPlan.from_json(mlp_plan.to_json())
+        plan.fingerprint = "c" * 64
+        mesh = MeshSpec(("pod", "data", "model"), (2, 2, 2),
+                        dcn_axes=("pod",))
+        plan.mesh = mesh
+        p2 = ShardingPlan.from_json(plan.to_json())
+        assert p2.mesh == mesh
+        assert p2.mesh.dcn_axes == ("pod",)
+        store = PlanStore(tmp_path)
+        store.put(plan)
+        got = store.get("c" * 64, mesh)
+        assert got is not None and got.mesh.dcn_axes == ("pod",)
+
     def test_logical_axes_spelling_normalized(self):
         """Regression: lists, tuples, and nested mixes of the same
         declaration must hash to one key (v1 keyed on raw repr)."""
