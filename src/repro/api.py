@@ -55,10 +55,14 @@ from repro.core.partitioner import (ShardingPlan, ToastArtifacts,  # noqa: F401
                                     _state_specs, analyze,
                                     flatten_logical_axes)
 from repro.core.search import SearchBackend, get_backend
+from repro.core.verify import (Finding, VerifyReport,  # noqa: F401
+                               attach_conformance, conformance_check,
+                               verify_state)
 
 __all__ = [
-    "Constraint", "ConstraintError", "CoSearchResult", "Forbid", "Pin",
-    "Replicate", "Request", "Session", "ShardingPlan",
+    "Constraint", "ConstraintError", "CoSearchResult", "Finding",
+    "Forbid", "Pin", "Replicate", "Request", "Session", "ShardingPlan",
+    "VerifyReport",
 ]
 
 
@@ -487,6 +491,127 @@ class Session:
             breakdown=cm.evaluate(state).as_dict(),
             backend=label, search_seconds=0.0, evaluations=0,
             eval_stats={})
+
+    def verify(self, request: Request | None, plan: ShardingPlan, *,
+               hlo=None, conformance: str | bool = "auto"
+               ) -> VerifyReport:
+        """Statically verify a plan against this session's program.
+
+        Runs the full ``repro.core.verify`` rule set — state validity,
+        the collective exactness oracle, divisibility, the independent
+        memory-peak walk, spec re-projection, and constraint
+        contradiction / dead-action analysis — and, when compiled HLO is
+        available, the communication-conformance check (predicted vs
+        emitted collectives, loop-aware).
+
+        Args:
+            request: the request the plan answered; supplies hardware,
+                constraints and ``min_dims``.  ``None`` means a bare
+                request on the plan's mesh (default hardware budget, no
+                constraints).
+            plan: the plan to verify (produced by this session).
+            hlo: compiled HLO to conform against — the ``as_text()``
+                string, a ``repro.launch.hlo_analysis.HloSummary``, or a
+                ``{kind: bytes}`` mapping (e.g. harvested in a
+                subprocess by ``repro.launch.measure.hlo_for_plan``).
+            conformance: ``"auto"`` lowers and compiles in-process when
+                enough local devices exist (skipping with an info
+                finding otherwise); ``False`` disables conformance.
+
+        Returns:
+            The :class:`repro.core.verify.VerifyReport`.
+        """
+        if request is None:
+            request = Request(mesh=plan.mesh)
+        cm = self._cost_model(plan.mesh, request.hw)
+        findings_pre: list[Finding] = []
+        if plan.mesh != request.mesh:
+            findings_pre.append(Finding(
+                "state", -1, "warning",
+                f"plan mesh {plan.mesh.as_dict()} differs from the "
+                f"request mesh {request.mesh.as_dict()} — verifying "
+                f"under the plan's"))
+        cs = None
+        try:
+            cs = self.compile_constraints(
+                dataclasses.replace(request, mesh=plan.mesh))
+        except ConstraintError as e:
+            findings_pre.append(Finding(
+                "constraint-contradiction", -1, "error",
+                f"constraints do not compile: {e}"))
+        actions = self._actions(plan.mesh, request.min_dims)
+        report = verify_state(cm, plan.state, plan=plan,
+                              constraint_set=cs, actions=actions,
+                              hw=request.hw)
+        report.findings.extend(findings_pre)
+
+        emitted = self._conformance_source(plan, hlo, conformance,
+                                           report)
+        if emitted is not None:
+            coll, unknown, top = emitted
+            attach_conformance(report, conformance_check(
+                report.predicted, coll, unknown_dtypes=unknown,
+                emitted_top=top))
+        report.sort()
+        return report
+
+    def _conformance_source(self, plan, hlo, conformance, report):
+        """Resolve ``(coll_bytes, unknown_dtypes, top)`` for conformance,
+        or ``None`` (with an info finding) when it cannot run."""
+        if conformance is False:
+            return None
+        if hlo is not None:
+            if isinstance(hlo, dict):
+                return (hlo.get("coll_bytes", hlo),
+                        hlo.get("unknown_dtypes", ())
+                        if "coll_bytes" in hlo else (),
+                        hlo.get("top_collectives")
+                        if "coll_bytes" in hlo else None)
+            if isinstance(hlo, str):
+                from repro.launch.hlo_analysis import (summarize,
+                                                       top_collectives)
+                s = summarize(hlo)
+                return (s.coll_bytes, s.unknown_dtypes,
+                        top_collectives(hlo))
+            return (hlo.coll_bytes, getattr(hlo, "unknown_dtypes", ()),
+                    None)
+        if self.kwargs:
+            report.findings.append(Finding(
+                "conformance", -1, "info",
+                "conformance skipped: session has kwargs (plan.apply "
+                "takes positional arguments only)"))
+            return None
+        import jax
+        if plan.mesh.num_devices > len(jax.devices()):
+            report.findings.append(Finding(
+                "conformance", -1, "info",
+                f"conformance skipped: plan needs "
+                f"{plan.mesh.num_devices} devices, "
+                f"{len(jax.devices())} available (pass hlo= from a "
+                f"subprocess harvest, see repro.launch.measure."
+                f"hlo_for_plan)"))
+            return None
+        try:
+            # trace under the plan's logical rules so the models'
+            # ``constrain`` hooks pin intermediates to the plan's
+            # internal assignment (same convention as the measure
+            # worker) — the emitted collectives are then attributable
+            # to the plan rather than to free GSPMD propagation
+            from repro.launch.mesh import compat_make_mesh, mesh_context
+            from repro.models.sharding import logical_rules
+            mesh = compat_make_mesh(plan.mesh.sizes, plan.mesh.axes)
+            with mesh_context(mesh), \
+                    logical_rules(plan.logical_rules or None):
+                lowered = plan.apply(self.fn, mesh).lower(*self.args)
+            text = lowered.compile().as_text()
+        except Exception as e:                          # noqa: BLE001
+            report.findings.append(Finding(
+                "conformance", -1, "warning",
+                f"conformance skipped: lower/compile failed ({e!r})"))
+            return None
+        from repro.launch.hlo_analysis import summarize, top_collectives
+        s = summarize(text)
+        return (s.coll_bytes, s.unknown_dtypes, top_collectives(text))
 
     def _build_plan(self, request: Request, state: ShardingState, cm,
                     *, cost: float, breakdown: dict, backend: str,

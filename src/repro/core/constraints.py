@@ -467,11 +467,9 @@ def compile_constraints(constraints: Sequence[Constraint],
 def check_plan(plan, constraints: Sequence[Constraint]) -> list[str]:
     """Verify a finished plan against user constraints, spec-level.
 
-    Unlike :func:`compile_constraints` this needs no analysis artifacts:
-    it checks the plan's ``in_specs`` directly, so it works on plans
-    loaded from JSON / the plan store.  Logical-name targets require the
-    plan to carry ``plan.logical_axes`` (plans produced by
-    ``Session.partition`` always do when the request declared them).
+    Message-only wrapper around :func:`check_plan_detailed` (the
+    historical interface — callers that need to know *which* constraint
+    failed use the detailed variant or ``ShardingPlan.check``).
 
     Args:
         plan: a ``ShardingPlan``.
@@ -483,11 +481,35 @@ def check_plan(plan, constraints: Sequence[Constraint]) -> list[str]:
     Raises:
         ConstraintError: when a target resolves to nothing.
     """
+    return [msg for _, msg in check_plan_detailed(plan, constraints)]
+
+
+def check_plan_detailed(plan, constraints: Sequence[Constraint]
+                        ) -> list[tuple[Constraint, str]]:
+    """Verify a finished plan against user constraints, spec-level.
+
+    Unlike :func:`compile_constraints` this needs no analysis artifacts:
+    it checks the plan's ``in_specs`` directly, so it works on plans
+    loaded from JSON / the plan store.  Logical-name targets require the
+    plan to carry ``plan.logical_axes`` (plans produced by
+    ``Session.partition`` always do when the request declared them).
+
+    Args:
+        plan: a ``ShardingPlan``.
+        constraints: the constraints the plan must satisfy.
+
+    Returns:
+        ``(violated constraint, message)`` per violation, empty when the
+        plan satisfies all.
+
+    Raises:
+        ConstraintError: when a target resolves to nothing.
+    """
     paths = plan.input_paths
     specs = [tuple(_norm_entry(e) for e in s) for s in plan.in_specs]
     la = plan.logical_axes
     names = _logical_names(la)
-    errs: list[str] = []
+    errs: list[tuple[Constraint, str]] = []
 
     def logical_entries(name: str) -> list[tuple[int, int]]:
         return [(i, d) for i, nt in enumerate(la or []) if nt is not None
@@ -510,10 +532,11 @@ def check_plan(plan, constraints: Sequence[Constraint]) -> list[str]:
                 axes = _norm_entry(c.spec)
                 for i, d in logical_entries(c.target):
                     if specs[i][d] != axes:
-                        errs.append(
-                            f"{what}: {paths[i]} dim {d} is "
-                            f"{specs[i][d] or 'replicated'}, pinned to "
-                            f"{axes or 'replicated'}")
+                        errs.append((c,
+                                     f"{what}: {paths[i]} dim {d} is "
+                                     f"{specs[i][d] or 'replicated'}, "
+                                     f"pinned to "
+                                     f"{axes or 'replicated'}"))
             else:
                 idxs = match_paths(c.target, paths)
                 if not idxs:
@@ -522,20 +545,22 @@ def check_plan(plan, constraints: Sequence[Constraint]) -> list[str]:
                 want = _norm_spec(c.spec)
                 for i in idxs:
                     if specs[i] != want:
-                        errs.append(f"{what}: {paths[i]} has "
-                                    f"{specs[i]}, pinned to {want}")
+                        errs.append((c, f"{what}: {paths[i]} has "
+                                     f"{specs[i]}, pinned to {want}"))
         elif isinstance(c, Replicate):
             what = f"Replicate({c.target!r})"
             for i, d in entries_for(c.target, what):
                 if specs[i][d]:
-                    errs.append(f"{what}: {paths[i]} dim {d} is sharded "
-                                f"on {specs[i][d]}")
+                    errs.append((c, f"{what}: {paths[i]} dim {d} is "
+                                 f"sharded on {specs[i][d]}"))
         elif isinstance(c, Forbid):
             what = f"Forbid({c.target!r}, {c.axis!r})"
             for i, d in entries_for(c.target, what):
                 if c.axis in specs[i][d]:
-                    errs.append(f"{what}: {paths[i]} dim {d} is sharded "
-                                f"on forbidden axis {c.axis!r}")
+                    errs.append((c, f"{what}: {paths[i]} dim {d} is "
+                                 f"sharded on forbidden axis "
+                                 f"{c.axis!r}"))
         else:
-            errs.append(f"unknown constraint type {type(c).__name__}")
+            errs.append((c, f"unknown constraint type "
+                         f"{type(c).__name__}"))
     return errs

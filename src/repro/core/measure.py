@@ -38,6 +38,33 @@ import numpy as np
 
 from repro.core.cost_model import HardwareSpec, ShardingState
 from repro.core.search import recover_actions
+from repro.core.verify import Finding, verify_state
+
+
+def verify_gate(cm, state, *, plan=None) -> list[Finding]:
+    """Soundness findings that should block measuring a plan variant.
+
+    Measured execution pays a subprocess (respawned jax, full
+    lower+compile, timed repeats) per cell; a plan that fails *static*
+    soundness — unknown axes, corrupted specs, a cost model whose
+    collective accounting disagrees with the independent derivation —
+    wastes that time on a number that means nothing.  This gate runs the
+    pure verifier and returns its blocking findings
+    (``VerifyReport.blocking``): error findings from the soundness rules
+    only.  Predicted-over-memory-budget plans are deliberately *not*
+    blocked — OOM is a legitimate measurable outcome.
+
+    Args:
+        cm: the model's ``CostModel`` (program + mesh + hardware).
+        state: the variant's sharding state.
+        plan: optional materialized ``ShardingPlan`` for the state
+            (enables spec-level cross-checks).
+
+    Returns:
+        Blocking findings; empty when the variant is sound to measure.
+    """
+    report = verify_state(cm, state, plan=plan)
+    return report.blocking()
 
 
 @dataclasses.dataclass
@@ -50,7 +77,9 @@ class MeasuredCell:
             ("unsharded", "best", "prefix@k", "worst1").
         mesh: the mesh string ("2x2").
         devices: simulated device count the plan ran on.
-        status: "ok", "oom", "compile_error", "timeout", or "error".
+        status: "ok", "oom", "compile_error", "timeout", "error", or
+            "verify_failed" (the static verifier rejected the plan
+            before any subprocess ran — see :func:`verify_gate`).
         cost: the plan's paper cost ``C(s)`` under the prediction hw.
         predicted_s: analytic runtime under the *uncalibrated* hardware.
         predicted_calibrated_s: analytic runtime re-costed under the

@@ -27,13 +27,51 @@ import jax
 from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.core.conflicts import ConflictAnalysis, analyze_conflicts
-from repro.core.constraints import ConstraintError, check_plan, match_paths
+from repro.core.constraints import (Constraint, ConstraintError,
+                                    check_plan_detailed, match_paths)
 from repro.core.cost_model import (CostModel, HardwareSpec, MeshSpec,
                                    ShardingState)
 from repro.core.ir import Program, extract_program
 from repro.core.mcts import MCTSConfig
 from repro.core.nda import NDAResult, run_nda
 from repro.core.search import SearchBackend
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One constraint violation found by :meth:`ShardingPlan.check`.
+
+    Attributes:
+        constraint: the violated constraint object.
+        message: human-readable description of the violation.
+    """
+
+    constraint: Constraint
+    message: str
+
+    def __str__(self) -> str:
+        """The violation message."""
+        return self.message
+
+
+class CheckResult(list):
+    """The violations :meth:`ShardingPlan.check` found.
+
+    A ``list`` of :class:`Violation` with *inverted* truthiness: the
+    result is truthy when the plan **satisfies** every constraint
+    (preserving the historical ``assert plan.check(cs)`` idiom, where
+    ``check`` returned a bare ``True``) and falsy when violations
+    exist — iterate it to see which constraints failed.
+    """
+
+    def __bool__(self) -> bool:
+        """True when no violation was found."""
+        return len(self) == 0
+
+    @property
+    def messages(self) -> list[str]:
+        """The violation messages alone."""
+        return [v.message for v in self]
 
 
 @dataclasses.dataclass
@@ -172,25 +210,65 @@ class ShardingPlan:
             raise ValueError(f"spec_for({pattern!r}) is ambiguous: {hits}")
         return self.in_specs[idxs[0]]
 
-    def check(self, constraints) -> bool:
-        """Assert the plan satisfies user constraints.
+    def check(self, constraints, *,
+              raise_on_violation: bool = True) -> CheckResult:
+        """Check the plan against user constraints.
 
         Args:
             constraints: iterable of ``repro.core.constraints``
                 constraints (``Pin`` / ``Replicate`` / ``Forbid``).
+            raise_on_violation: raise ``ConstraintError`` when any
+                constraint is violated (the historical behaviour); pass
+                ``False`` to inspect the violations instead.
 
         Returns:
-            True when every constraint is satisfied.
+            A :class:`CheckResult` — a list of :class:`Violation`
+            that is truthy when the plan satisfies every constraint
+            (back-compat with the old bare-``True`` return).
 
         Raises:
-            ConstraintError: listing every violated constraint, or when
-                a target resolves to no input.
+            ConstraintError: listing every violated constraint (unless
+                ``raise_on_violation=False``), or when a target resolves
+                to no input.
         """
-        errs = check_plan(self, tuple(constraints))
-        if errs:
-            raise ConstraintError("plan violates constraints: " +
-                                  "; ".join(errs))
-        return True
+        result = CheckResult(
+            Violation(c, msg)
+            for c, msg in check_plan_detailed(self, tuple(constraints)))
+        if result or not raise_on_violation:
+            return result
+        raise ConstraintError("plan violates constraints: " +
+                              "; ".join(result.messages))
+
+    def verify(self, session=None, request=None, **kwargs):
+        """Statically verify the plan (see ``repro.core.verify``).
+
+        Convenience delegator: with a ``session`` this is
+        ``session.verify(request, plan, **kwargs)`` (full rule set +
+        communication conformance); without one, only the rules that
+        need no trace artifacts run (constraint spec checks).
+
+        Args:
+            session: the ``repro.api.Session`` that produced the plan
+                (enables every rule + conformance).
+            request: the ``repro.api.Request`` the plan answered
+                (defaults to a bare request on the plan's mesh).
+            **kwargs: forwarded to ``Session.verify`` (``hlo``,
+                ``conformance``, ...).
+
+        Returns:
+            A ``repro.core.verify.VerifyReport``.
+
+        Raises:
+            ValueError: when called without a session (artifact-free
+                verification needs one; load-from-JSON plans can only be
+                checked via :meth:`check`).
+        """
+        if session is None:
+            raise ValueError(
+                "plan.verify needs the Session that produced the plan "
+                "(the verifier re-derives collectives from its trace "
+                "artifacts); for JSON-loaded plans use plan.check")
+        return session.verify(request, self, **kwargs)
 
     def apply(self, fn: Callable, mesh: jax.sharding.Mesh | None = None,
               **jit_kwargs) -> "AppliedPlan":

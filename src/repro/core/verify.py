@@ -1,0 +1,988 @@
+"""Static SPMD soundness verifier + communication-conformance pass.
+
+TOAST's thesis is that *principled static analysis* should decide what a
+partitioning can and cannot do.  This module is the checker for that
+claim: a dataflow pass over ``Program`` + ``ShardingState`` that proves a
+:class:`~repro.core.partitioner.ShardingPlan` sound **before** any device
+time is spent, and — given the collective traffic of the compiled HLO —
+that the cost model's predicted communication is what XLA actually emits.
+
+Three layers, all reported as structured :class:`Finding` records rather
+than bare booleans:
+
+1. **An independent collective derivation** (:func:`predicted_collectives`)
+   re-derives the per-op resharding/collective multiset (kind, mesh axes,
+   bytes) from the NDA colors.  It is a second implementation,
+   structurally different from ``CostModel``'s (no shared resolution
+   memos, suppression computed by win/loss bookkeeping instead of
+   chosen/suppressed set subtraction), yet byte-exact by construction —
+   so comparing its per-op communication bytes against
+   ``CostModel.op_cost_row`` is an *exactness oracle* over the cost
+   model's collective accounting (rule ``collective-mismatch``).
+2. **Soundness rules** (:func:`verify_state`): mesh-axis validity of the
+   state, divisibility of every sharded dim at every site, an
+   independent live-range walk of the per-device memory peak against
+   ``HardwareSpec.hbm_per_chip``, spec re-projection against the plan's
+   recorded ``in_specs``/``out_specs``, and constraint contradictions /
+   dead actions (a ``Pin`` a ``Forbid`` makes unreachable, constraints
+   on colors no action can touch).
+3. **Communication conformance** (:func:`conformance_check`): the
+   predicted multiset against the collectives parsed out of compiled HLO
+   by ``repro.launch.hlo_analysis`` (loop-aware), matched at three
+   levels — per-kind, per-class (reduce-ish vs gather-ish, absorbing
+   GSPMD's all-reduce → reduce-scatter + all-gather split), and grand
+   total — with per-op attribution of mismatches.
+
+The verifier is pure (no jax import): lowering/compiling for conformance
+happens in ``repro.api.Session.verify`` or in the zoo's subprocess HLO
+harvest (``repro.launch.measure.hlo_for_plan``).  See ``docs/verify.md``
+for the rule catalog and the conformance methodology.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core.conflicts import ConflictAnalysis
+from repro.core.constraints import ConstraintSet, _norm_entry, check_plan
+from repro.core.cost_model import CostModel, ShardingState
+
+# severity levels, most severe first (report tables sort by this order)
+SEVERITIES = ("error", "warning", "info")
+
+# soundness rules: an error-severity finding from one of these means the
+# plan is structurally wrong (not merely infeasible) — the measured-
+# execution gate refuses to spend subprocess time on such plans, while
+# "memory" (over budget) stays measurable on purpose: OOM is a
+# legitimate experimental outcome, unsoundness is not.
+SOUNDNESS_RULES = ("state", "divisibility", "spec-mismatch",
+                   "collective-mismatch", "constraint",
+                   "constraint-contradiction")
+
+# predicted-vs-emitted matching knobs (documented in docs/verify.md):
+# per-kind / per-class / total bytes must agree within CONF_REL_TOL of
+# the larger side; kinds where both sides are below CONF_ABS_FLOOR are
+# noise (padding, bookkeeping) and are ignored.
+CONF_REL_TOL = 0.25
+CONF_ABS_FLOOR = float(1 << 16)
+# at the "covered" level, GSPMD propagation surplus beyond this factor
+# of the analytic multiset escalates the finding from info to warning
+CONF_SURPLUS_WARN = 4.0
+
+# kind-equivalence classes for the "class" match level.  GSPMD lowers a
+# predicted all-reduce as reduce-scatter + all-gather (and a predicted
+# all-to-all occasionally as collective-permute chains), moving bytes
+# between kinds but not across these classes.
+KIND_CLASSES = {
+    "all-reduce": "reduce", "reduce-scatter": "reduce",
+    "all-gather": "gather", "all-to-all": "gather",
+    "collective-permute": "gather",
+}
+
+# cost-model kind -> compiled-HLO instruction spelling
+_HLO_KIND = {"all_reduce": "all-reduce", "all_gather": "all-gather",
+             "reduce_scatter": "reduce-scatter", "all_to_all": "all-to-all"}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One verifier diagnosis.
+
+    Attributes:
+        rule: rule identifier ("state", "divisibility", "memory",
+            "spec-mismatch", "collective-mismatch", "constraint",
+            "constraint-contradiction", "dead-action", "conformance").
+        op: program op index the finding attributes to (-1 for
+            program-level findings: inputs, constraints, totals).
+        severity: "error", "warning", or "info".
+        message: human-readable diagnosis.
+    """
+
+    rule: str
+    op: int
+    severity: str
+    message: str
+
+    def as_dict(self) -> dict:
+        """Plain-dict view (JSON-serializable)."""
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class PredictedCollective:
+    """One collective the sharding state implies, independently derived.
+
+    Attributes:
+        kind: cost-model kind ("all_gather", "all_to_all", "all_reduce").
+        op: index of the op whose operand/result forces the collective.
+        prim: primitive name of that op (attribution convenience).
+        vid: value id being resharded (-1 for contracting-dim
+            all-reduces, which belong to the op's result).
+        axes: mesh axes the collective runs over.
+        trip: loop trip count of the op (1 outside loops).
+        comm_bytes: contribution to ``CostBreakdown.comm_bytes`` under
+            the cost model's accounting convention, trip included — the
+            quantity the exactness oracle compares per op.
+        result_bytes: per-device result-buffer size of the emitted HLO
+            instruction (one loop iteration) — the quantity conformance
+            compares against compiled-HLO collective bytes.
+    """
+
+    kind: str
+    op: int
+    prim: str
+    vid: int
+    axes: tuple[str, ...]
+    trip: int
+    comm_bytes: float
+    result_bytes: float
+
+    def as_dict(self) -> dict:
+        """Plain-dict view (JSON-serializable)."""
+        d = dataclasses.asdict(self)
+        d["axes"] = list(self.axes)
+        return d
+
+
+@dataclasses.dataclass
+class VerifyReport:
+    """Everything one verification pass established.
+
+    Attributes:
+        findings: structured diagnoses, most severe first.
+        predicted: the independently derived collective multiset.
+        peak_bytes: per-device memory peak from the independent
+            live-range walk.
+        peak_op: op index after which the peak occurs (-1 = at program
+            start, before any op).
+        conformance: :func:`conformance_check` result when a compiled-HLO
+            comparison ran, else ``None``.
+    """
+
+    findings: list[Finding] = dataclasses.field(default_factory=list)
+    predicted: list[PredictedCollective] = \
+        dataclasses.field(default_factory=list)
+    peak_bytes: float = 0.0
+    peak_op: int = -1
+    conformance: dict | None = None
+
+    @property
+    def errors(self) -> list[Finding]:
+        """Error-severity findings."""
+        return [f for f in self.findings if f.severity == "error"]
+
+    @property
+    def warnings(self) -> list[Finding]:
+        """Warning-severity findings."""
+        return [f for f in self.findings if f.severity == "warning"]
+
+    @property
+    def ok(self) -> bool:
+        """True when no error finding exists and conformance (if run)
+        did not end in "mismatch"."""
+        if self.errors:
+            return False
+        if self.conformance is not None and \
+                self.conformance.get("match") == "mismatch":
+            return False
+        return True
+
+    def blocking(self) -> list[Finding]:
+        """Error findings from soundness rules (the measure gate).
+
+        Over-budget "memory" findings are excluded on purpose: running a
+        predicted-OOM plan is a legitimate experiment, running a
+        structurally unsound one is wasted subprocess time.
+
+        Returns:
+            The findings that should stop downstream execution.
+        """
+        return [f for f in self.errors if f.rule in SOUNDNESS_RULES]
+
+    def sort(self) -> None:
+        """Order findings most-severe-first, then by rule and op."""
+        order = {s: i for i, s in enumerate(SEVERITIES)}
+        self.findings.sort(key=lambda f: (order.get(f.severity, 99),
+                                          f.rule, f.op))
+
+    def table(self) -> str:
+        """Render the findings as an aligned text table.
+
+        Returns:
+            A printable multi-line string ("all checks passed" when the
+            report is clean).
+        """
+        if not self.findings:
+            return "verify: all checks passed (no findings)"
+        rows = [["severity", "rule", "op", "message"]]
+        for f in self.findings:
+            rows.append([f.severity.upper(), f.rule,
+                         str(f.op) if f.op >= 0 else "-", f.message])
+        widths = [max(len(r[i]) for r in rows) for i in range(3)]
+        lines = []
+        for j, r in enumerate(rows):
+            lines.append("  ".join(x.ljust(w)
+                                   for x, w in zip(r[:3], widths))
+                         + "  " + r[3])
+            if j == 0:
+                lines.append("  ".join("-" * w for w in widths) + "  " +
+                             "-" * 7)
+        return "\n".join(lines)
+
+    def as_dict(self) -> dict:
+        """JSON-serializable record (the ``BENCH_verify.json`` row)."""
+        counts: dict[str, int] = {}
+        for f in self.findings:
+            counts[f.severity] = counts.get(f.severity, 0) + 1
+        return {
+            "ok": self.ok,
+            "counts": counts,
+            "findings": [f.as_dict() for f in self.findings],
+            "n_predicted_collectives": len(self.predicted),
+            "predicted_comm_bytes":
+                sum(p.comm_bytes for p in self.predicted),
+            "peak_bytes": self.peak_bytes,
+            "peak_op": self.peak_op,
+            "conformance": self.conformance,
+        }
+
+
+# -- independent sharding resolution -----------------------------------------
+
+def muted_groups(analysis: ConflictAnalysis, bits) -> frozenset[int]:
+    """Groups whose sharding the resolution bits silence.
+
+    Independent reformulation of ``CostModel._chosen_suppressed``: walk
+    every conflict once recording which side *wins* and which *loses*
+    under the bit assignment; a group is muted iff it loses at least one
+    conflict and wins none.  (The cost model computes the same set as
+    ``suppressed - chosen``.)
+
+    Args:
+        analysis: the program's conflict analysis.
+        bits: ``{supergroup index: bit}`` mapping (or the canonical
+            ``ShardingState.bits`` tuple).
+
+    Returns:
+        The muted group set.
+    """
+    chosen_bits = dict(bits)
+    wins: set[int] = set()
+    losses: set[int] = set()
+    for gi, sg in enumerate(analysis.supergroups):
+        bit = chosen_bits.get(gi, 0)
+        for sid in sg:
+            cs = analysis.compat_sets[sid]
+            for c in cs.conflicts:
+                lo, hi = cs.sides[c.cid]
+                winner, loser = (hi, lo) if bit else (lo, hi)
+                wins.add(winner)
+                losses.add(loser)
+    return frozenset(losses - wins)
+
+
+class StateResolver:
+    """Resolves sites to per-dim mesh axes for one sharding state.
+
+    A from-scratch implementation of the color→axes projection (the
+    semantics of ``CostModel._site_axes_info``): per dim, the assigned
+    axes of its color apply unless the dim's group is muted, each axis
+    kept only when it is unused by earlier dims of the same site and
+    divides the remaining dim size.  Unlike the cost model it *records*
+    every silently dropped axis (``drops``) and tolerates unknown mesh
+    axes (``unknown_axes``) instead of raising, so the verifier can turn
+    both into findings.
+    """
+
+    def __init__(self, nda, analysis: ConflictAnalysis, mesh,
+                 state: ShardingState) -> None:
+        """Bind a resolver to one (program analysis, mesh, state).
+
+        Args:
+            nda: the program's ``NDAResult``.
+            analysis: the program's conflict analysis.
+            mesh: ``MeshSpec`` supplying axis names and sizes.
+            state: the canonical sharding state to resolve under.
+        """
+        self._colors = nda.colors_arr
+        self._groups = nda.groups_arr
+        self._sizes = nda.node_sizes
+        self._axis_size = dict(zip(mesh.axes, mesh.sizes))
+        self.assignment = dict(state.color_axes)
+        self.muted = muted_groups(analysis, state.bits)
+        # (op_index, vid, dim, axis, remaining size) per dropped axis
+        self.drops: list[tuple[int, int, int, str, int]] = []
+        self.unknown_axes: set[str] = set()
+
+    def dims(self, site) -> list[tuple[str, ...]]:
+        """Mesh axes sharding each dim of ``site`` under the state.
+
+        Args:
+            site: an NDA def or use ``Site``.
+
+        Returns:
+            One axes tuple per dim (empty tuple = replicated dim).
+        """
+        resolved: list[tuple[str, ...]] = []
+        taken: set[str] = set()
+        for d, node in enumerate(site.dims):
+            color = int(self._colors[node])
+            axes = self.assignment.get(color, ())
+            if axes and int(self._groups[node]) in self.muted:
+                axes = ()
+            keep: list[str] = []
+            left = self._sizes.get(node, 0)
+            for a in axes:
+                n = self._axis_size.get(a)
+                if n is None:
+                    self.unknown_axes.add(a)
+                    continue
+                if a in taken:
+                    continue
+                if left % n != 0 or left < n:
+                    self.drops.append((site.op_index, site.value, d, a,
+                                       left))
+                    continue
+                keep.append(a)
+                taken.add(a)
+                left //= n
+            resolved.append(tuple(keep))
+        return resolved
+
+
+# -- independent collective derivation ---------------------------------------
+
+def _factor_of(axes_per_dim, axis_size: dict) -> int:
+    """Total shard count implied by per-dim axes tuples."""
+    f = 1
+    for axes in axes_per_dim:
+        for a in axes:
+            f *= axis_size[a]
+    return f
+
+
+def _contract_dims(op) -> tuple[int, ...]:
+    """Dims of operand 0 that a reduction/contraction consumes."""
+    if op.prim == "dot_general":
+        (lc, _rc), _batch = op.params["dimension_numbers"]
+        return tuple(lc)
+    if op.prim.startswith("reduce_") or op.prim in ("argmax", "argmin"):
+        return tuple(op.params.get("axes", ()))
+    return ()
+
+
+def predicted_collectives(cm: CostModel, state: ShardingState,
+                          resolver: StateResolver | None = None
+                          ) -> list[PredictedCollective]:
+    """Independently derive the collective multiset a state implies.
+
+    Walks every op: for each operand whose def- and use-site shardings
+    differ, dim-wise gathered/scattered axes decide the resharding — an
+    all-to-all per axis that moved between dims, one all-gather over the
+    rest (refining replication to sharding is local and emits nothing) —
+    and sharded contracting dims of the op add a partial-result
+    all-reduce.  Byte conventions follow the cost model exactly (see
+    :class:`PredictedCollective`): summing ``comm_bytes`` per op must
+    reproduce ``CostModel.op_cost_row``'s communication column, which is
+    what :func:`verify_state` asserts (the exactness oracle).
+
+    Args:
+        cm: cost model binding the program, analysis, mesh and hardware
+            (used for program access only — resolution is independent).
+        state: the canonical sharding state.
+        resolver: optional pre-built :class:`StateResolver` (shared with
+            the caller so drop records accumulate in one place).
+
+    Returns:
+        The predicted collectives, program order.
+    """
+    prog, nda = cm.prog, cm.nda
+    res = resolver or StateResolver(nda, cm.analysis, cm.mesh, state)
+    axis_size = dict(zip(cm.mesh.axes, cm.mesh.sizes))
+    use_index = {(s.op_index, s.slot): s for s in nda.use_sites}
+    out: list[PredictedCollective] = []
+
+    for op_idx, op in enumerate(prog.ops):
+        trip = prog.trip_counts.get(op_idx, 1)
+        first_use: list[tuple[str, ...]] | None = None
+        for slot, vid in enumerate(op.operands):
+            usite = use_index.get((op_idx, slot))
+            if usite is None:
+                continue
+            ua = res.dims(usite)
+            if slot == 0:
+                first_use = ua
+            dsite = nda.def_site.get(vid)
+            if dsite is None or len(dsite.dims) != len(usite.dims):
+                continue
+            da = res.dims(dsite)
+            nbytes = prog.types[vid].nbytes
+            gathered: list[str] = []
+            scattered: set[str] = set()
+            for d_ax, u_ax in zip(da, ua):
+                gathered.extend(a for a in d_ax if a not in u_ax)
+                scattered.update(a for a in u_ax if a not in d_ax)
+            if not gathered:
+                continue    # refining replication to sharding is local
+            local = nbytes / _factor_of(da, axis_size)
+            moved = [a for a in gathered if a in scattered]
+            for a in sorted(moved):
+                out.append(PredictedCollective(
+                    "all_to_all", op_idx, op.prim, vid, (a,), trip,
+                    comm_bytes=local / axis_size[a] * trip,
+                    result_bytes=local))
+            remaining = tuple(a for a in gathered if a not in scattered)
+            if remaining:
+                within = nbytes / _factor_of(
+                    [tuple(a for a in ax if a not in remaining)
+                     for ax in da], axis_size)
+                out.append(PredictedCollective(
+                    "all_gather", op_idx, op.prim, vid, remaining, trip,
+                    comm_bytes=within * trip, result_bytes=within))
+
+        # partial-result all-reduce when contracting dims are sharded
+        contract_axes: list[str] = []
+        if first_use:
+            for d in _contract_dims(op):
+                if d < len(first_use):
+                    contract_axes.extend(first_use[d])
+        if contract_axes:
+            out_axes = [res.dims(nda.def_site[r]) for r in op.results]
+            out_local = sum(
+                prog.types[r].nbytes / _factor_of(a, axis_size)
+                for r, a in zip(op.results, out_axes))
+            out.append(PredictedCollective(
+                "all_reduce", op_idx, op.prim, -1, tuple(contract_axes),
+                trip, comm_bytes=out_local * 2 * trip,
+                result_bytes=out_local))
+    return out
+
+
+# -- independent memory walk -------------------------------------------------
+
+def liveness_peak(cm: CostModel, resolver: StateResolver
+                  ) -> tuple[float, int]:
+    """Per-device memory peak by an explicit forward live-set walk.
+
+    Structurally independent of the cost model's vectorized interval
+    tables: inputs live from the start, each op's results join the live
+    set, the peak is sampled after every op (before dead-operand frees),
+    and operands die at their last use unless they are program outputs.
+
+    Args:
+        cm: cost model binding program and mesh (program access only).
+        resolver: state resolver supplying per-site axes.
+
+    Returns:
+        ``(peak bytes, op index after which the peak occurs)`` — op
+        index -1 means the peak is the initial input set.
+    """
+    prog, nda = cm.prog, cm.nda
+    axis_size = dict(zip(cm.mesh.axes, cm.mesh.sizes))
+    final_use: dict[int, int] = {}
+    for i, op in enumerate(prog.ops):
+        for vid in op.operands:
+            final_use[vid] = i
+    outputs = set(prog.outputs)
+
+    def local(vid: int) -> float:
+        axes = resolver.dims(nda.def_site[vid])
+        return prog.types[vid].nbytes / _factor_of(axes, axis_size)
+
+    live: dict[int, float] = {v: local(v) for v in prog.inputs}
+    peak, peak_op = sum(live.values()), -1
+    for i, op in enumerate(prog.ops):
+        for r in op.results:
+            live[r] = local(r)
+        here = sum(live.values())
+        if here > peak:
+            peak, peak_op = here, i
+        for vid in op.operands:
+            if final_use.get(vid) == i and vid not in outputs:
+                live.pop(vid, None)
+    return peak, peak_op
+
+
+# -- rule passes -------------------------------------------------------------
+
+def _spec_entries(axes_per_dim) -> tuple[tuple[str, ...], ...]:
+    """Resolved per-dim axes -> normalized spec-entry tuples."""
+    return tuple(tuple(a) for a in axes_per_dim)
+
+
+def _plan_entries(spec) -> tuple[tuple[str, ...], ...]:
+    """A plan's ``PartitionSpec`` -> normalized spec-entry tuples."""
+    return tuple(_norm_entry(e) for e in spec)
+
+
+def _check_state(cm, state, findings) -> bool:
+    """Mesh-axis and color validity of the raw state; True when usable."""
+    known_axes = set(cm.mesh.axes)
+    known_colors = {int(c) for c in cm.nda.colors_arr}
+    usable = True
+    for color, axes in state.color_axes:
+        bad = [a for a in axes if a not in known_axes]
+        if bad:
+            usable = False
+            findings.append(Finding(
+                "state", -1, "error",
+                f"state assigns unknown mesh ax"
+                f"{'es' if len(bad) > 1 else 'is'} {bad} to color "
+                f"{color} (mesh axes: {tuple(cm.mesh.axes)})"))
+        if color not in known_colors:
+            findings.append(Finding(
+                "state", -1, "warning",
+                f"state assigns {tuple(axes)} to color {color}, which "
+                f"no site of this program carries (dead assignment)"))
+    return usable
+
+
+def _check_specs(cm, resolver, plan, findings) -> None:
+    """Re-project input/output specs and compare with the plan's."""
+    prog, nda = cm.prog, cm.nda
+    axis_size = dict(zip(cm.mesh.axes, cm.mesh.sizes))
+
+    def check_side(vids, specs, labels, what):
+        for vid, spec, label in zip(vids, specs, labels):
+            mine = _spec_entries(resolver.dims(nda.def_site[vid]))
+            theirs = _plan_entries(spec)
+            if mine != theirs:
+                findings.append(Finding(
+                    "spec-mismatch", nda.def_site[vid].op_index, "error",
+                    f"{what} {label}: plan records {theirs}, state "
+                    f"projects {mine}"))
+            # divisibility of the *recorded* spec against real shapes —
+            # a corrupted plan can carry axes its dims cannot hold
+            shape = prog.types[vid].shape
+            for d, axes in enumerate(theirs):
+                left = shape[d] if d < len(shape) else 0
+                for a in axes:
+                    n = axis_size.get(a)
+                    if n is None:
+                        findings.append(Finding(
+                            "spec-mismatch", nda.def_site[vid].op_index,
+                            "error",
+                            f"{what} {label} dim {d}: spec names "
+                            f"unknown mesh axis {a!r}"))
+                        continue
+                    if left % n != 0 or left < n:
+                        findings.append(Finding(
+                            "divisibility",
+                            nda.def_site[vid].op_index, "error",
+                            f"{what} {label} dim {d} (size "
+                            f"{shape[d] if d < len(shape) else '?'}) is "
+                            f"not divisible by axis {a!r} (size {n})"))
+                        continue
+                    left //= n
+
+    check_side(prog.inputs, plan.in_specs, prog.input_paths, "input")
+    if plan.out_specs:
+        check_side(prog.outputs, plan.out_specs,
+                   [f"#{k}" for k in range(len(prog.outputs))], "output")
+
+
+def constraint_findings(cs: ConstraintSet | None, actions,
+                        mesh, plan=None) -> list[Finding]:
+    """Contradiction / dead-action analysis of a compiled constraint set.
+
+    Args:
+        cs: the compiled ``ConstraintSet`` (``None`` → no findings).
+        actions: the *unpruned* action space for the plan's mesh
+            (``build_action_space`` output) — pruning removes exactly the
+            constrained actions, which would make everything look dead.
+        mesh: the ``MeshSpec`` the constraints must name axes of.
+        plan: optional ``ShardingPlan``; when given, spec-level
+            violations (``check_plan``) and state-level violations are
+            reported too.
+
+    Returns:
+        Findings: "constraint-contradiction" errors, "dead-action"
+        warnings, and "constraint" errors for plan violations.
+    """
+    if cs is None:
+        return []
+    out: list[Finding] = []
+    known_axes = set(mesh.axes)
+    banned = dict(cs.forbidden)
+    action_colors = {a.color for a in actions or ()}
+    action_pairs = {(a.color, a.axis) for a in actions or ()}
+
+    for color, axes in cs.pinned:
+        clash = sorted(set(axes) & set(banned.get(color, ())))
+        if clash:
+            out.append(Finding(
+                "constraint-contradiction", -1, "error",
+                f"color {color}: axis {clash[0]!r} is pinned and "
+                f"forbidden at once — the Pin is unreachable"))
+        unknown = [a for a in axes if a not in known_axes]
+        if unknown:
+            out.append(Finding(
+                "constraint-contradiction", -1, "error",
+                f"color {color}: pin names unknown mesh "
+                f"ax{'es' if len(unknown) > 1 else 'is'} {unknown} "
+                f"(mesh axes: {tuple(mesh.axes)})"))
+    for color, axes in cs.forbidden:
+        unknown = [a for a in axes if a not in known_axes]
+        if unknown:
+            out.append(Finding(
+                "constraint-contradiction", -1, "error",
+                f"color {color}: forbid names unknown mesh "
+                f"ax{'es' if len(unknown) > 1 else 'is'} {unknown}"))
+        if actions is None:
+            continue
+        if color not in action_colors:
+            out.append(Finding(
+                "dead-action", -1, "warning",
+                f"Forbid on color {color} is dead: no action can shard "
+                f"that color (pruned by min_dims or divisibility)"))
+            continue
+        dead = [a for a in axes
+                if a in known_axes and (color, a) not in action_pairs]
+        if dead:
+            out.append(Finding(
+                "dead-action", -1, "warning",
+                f"Forbid of {dead} on color {color} is dead: the action "
+                f"space never offers th{'ose axes' if len(dead) > 1 else 'at axis'}"))
+
+    if plan is not None:
+        for msg in cs.violations(plan.state):
+            out.append(Finding("constraint", -1, "error",
+                               f"state violates constraint: {msg}"))
+        if cs.source:
+            try:
+                for msg in check_plan(plan, cs.source):
+                    out.append(Finding("constraint", -1, "error",
+                                       f"plan violates constraint: "
+                                       f"{msg}"))
+            except Exception as e:              # noqa: BLE001
+                out.append(Finding("constraint", -1, "error",
+                                   f"constraint check failed: {e}"))
+    return out
+
+
+def verify_state(cm: CostModel, state: ShardingState, *, plan=None,
+                 constraint_set: ConstraintSet | None = None,
+                 actions=None, hw=None) -> VerifyReport:
+    """Run every static soundness rule over one sharding state.
+
+    Args:
+        cm: cost model binding the program, analysis, mesh and hardware
+            — also the exactness-oracle target (its per-op communication
+            bytes are compared against the independent derivation).
+        state: the canonical sharding state to verify.
+        plan: optional ``ShardingPlan`` whose recorded specs/breakdown
+            are cross-checked against the state (rules "spec-mismatch",
+            "divisibility", "memory").
+        constraint_set: optional compiled ``ConstraintSet`` for the
+            contradiction / dead-action rules.
+        actions: optional *unpruned* action space (dead-action rule).
+        hw: hardware spec supplying the memory budget (defaults to the
+            cost model's).
+
+    Returns:
+        The :class:`VerifyReport` (conformance not yet attached — see
+        :func:`conformance_check`).
+    """
+    hw = hw or cm.hw
+    findings: list[Finding] = []
+    report = VerifyReport(findings=findings)
+    usable = _check_state(cm, state, findings)
+
+    resolver = StateResolver(cm.nda, cm.analysis, cm.mesh, state)
+    report.predicted = predicted_collectives(cm, state, resolver)
+
+    # exactness oracle: per-op independent comm bytes vs the cost model
+    if usable:
+        color_axes, _ = state.as_dicts()
+        suppressed = cm.suppressed_for(state.bits)
+        rows, _ = cm.recost(range(len(cm.prog.ops)), (), color_axes,
+                            suppressed)
+        mine: dict[int, float] = {}
+        for p in report.predicted:
+            mine[p.op] = mine.get(p.op, 0.0) + p.comm_bytes
+        for i, row in rows.items():
+            a, b = mine.get(i, 0.0), row[4]
+            if not math.isclose(a, b, rel_tol=1e-9, abs_tol=1e-6):
+                findings.append(Finding(
+                    "collective-mismatch", i, "error",
+                    f"op {i} ({cm.prog.ops[i].prim}): cost model "
+                    f"charges {b:.1f} comm bytes, independent "
+                    f"derivation finds {a:.1f}"))
+
+    # memory: independent live walk vs budget and vs the plan breakdown
+    peak, peak_op = liveness_peak(cm, resolver)
+    report.peak_bytes, report.peak_op = peak, peak_op
+    budget = hw.hbm_per_chip
+    if peak > budget:
+        at = ("program inputs" if peak_op < 0 else
+              f"op {peak_op} ({cm.prog.ops[peak_op].prim})")
+        findings.append(Finding(
+            "memory", peak_op, "error",
+            f"per-device liveness peak {peak / 2**30:.3f} GiB exceeds "
+            f"the {budget / 2**30:.3f} GiB budget (peak at {at})"))
+    if plan is not None:
+        recorded = float(plan.breakdown.get("peak_bytes", peak))
+        if not math.isclose(peak, recorded, rel_tol=1e-6, abs_tol=1.0):
+            findings.append(Finding(
+                "memory", peak_op, "error",
+                f"plan breakdown records a {recorded / 2**30:.3f} GiB "
+                f"peak but the independent walk finds "
+                f"{peak / 2**30:.3f} GiB"))
+
+    # divisibility: every axis the resolution silently dropped
+    seen_drops: set[tuple] = set()
+    for op_idx, vid, d, a, left in resolver.drops:
+        key = (vid, d, a)
+        if key in seen_drops:
+            continue
+        seen_drops.add(key)
+        findings.append(Finding(
+            "divisibility", op_idx, "warning",
+            f"value %{vid} dim {d}: axis {a!r} does not divide the "
+            f"remaining dim size {left} and is silently dropped at "
+            f"op {op_idx}" if op_idx >= 0 else
+            f"value %{vid} dim {d}: axis {a!r} does not divide the "
+            f"remaining dim size {left} and is silently dropped"))
+    for a in sorted(resolver.unknown_axes):
+        findings.append(Finding(
+            "state", -1, "error",
+            f"resolution hit unknown mesh axis {a!r}"))
+
+    if plan is not None:
+        _check_specs(cm, resolver, plan, findings)
+
+    findings.extend(constraint_findings(constraint_set, actions,
+                                        cm.mesh, plan=plan))
+    report.sort()
+    return report
+
+
+# -- communication conformance -----------------------------------------------
+
+def predicted_hlo_bytes(predicted: list[PredictedCollective]
+                        ) -> dict[str, float]:
+    """Collapse predicted collectives into per-HLO-kind emitted bytes.
+
+    Resharding records are deduplicated by ``(value, kind, axes,
+    bytes)`` first: the cost model charges a reshard per *use site*,
+    while XLA CSEs identical resharding of one value into a single
+    emitted collective.  Contracting-dim all-reduces stay per-op (each
+    dot emits its own).  Loop trip counts multiply, matching the
+    loop-aware HLO walk.
+
+    Args:
+        predicted: :func:`predicted_collectives` output.
+
+    Returns:
+        ``{hlo kind: predicted emitted bytes}``.
+    """
+    out: dict[str, float] = {}
+    seen: set[tuple] = set()
+    for p in predicted:
+        if p.vid >= 0:
+            key = (p.vid, p.kind, p.axes, round(p.result_bytes, 3))
+            if key in seen:
+                continue
+            seen.add(key)
+        kind = _HLO_KIND.get(p.kind, p.kind)
+        out[kind] = out.get(kind, 0.0) + p.result_bytes * p.trip
+    return out
+
+
+def _agree(a: float, b: float, rel_tol: float, floor: float) -> bool:
+    """Two byte totals agree within tolerance (both tiny = agree)."""
+    if max(a, b) < floor:
+        return True
+    return abs(a - b) <= rel_tol * max(a, b)
+
+
+def _covered(pred: float, emit: float, rel_tol: float,
+             floor: float) -> bool:
+    """Predicted traffic is present in the artifact (one-sided check).
+
+    The analytic multiset is a *lower bound* on what GSPMD emits: the
+    compiler adds propagation traffic for values the analysis leaves
+    replicated and substitutes strategies (all-gather an operand instead
+    of all-reducing a partial product), but traffic the analysis
+    *predicts* must exist — a predicted collective absent from the
+    compiled module means the static analysis charged communication the
+    plan never pays, i.e. an analysis bug.
+
+    Args:
+        pred: predicted bytes for one kind/class/total.
+        emit: emitted bytes for the same bucket.
+        rel_tol: relative tolerance on the comparison.
+        floor: predicted buckets under this many bytes are vacuously
+            covered.
+
+    Returns:
+        Whether the emitted traffic accounts for the predicted traffic.
+    """
+    if pred < floor:
+        return True
+    return pred <= emit * (1.0 + rel_tol)
+
+
+def conformance_check(predicted: list[PredictedCollective],
+                      emitted: dict[str, float], *,
+                      unknown_dtypes=(), emitted_top=None,
+                      rel_tol: float = CONF_REL_TOL,
+                      abs_floor: float = CONF_ABS_FLOOR) -> dict:
+    """Match the predicted collective multiset against compiled HLO.
+
+    Five match levels, strongest first (documented in
+    ``docs/verify.md``):
+
+    - ``"exact"`` — per-kind bytes agree within ``rel_tol``;
+    - ``"class"`` — per-class bytes agree (reduce-ish vs gather-ish,
+      absorbing GSPMD kind substitutions like all-reduce →
+      reduce-scatter + all-gather);
+    - ``"total"`` — only the grand totals agree;
+    - ``"covered"`` — the artifact carries *at least* the predicted
+      traffic per class and in total (:func:`_covered`), plus surplus
+      GSPMD propagation traffic the analytic model deliberately does
+      not emulate (the surplus factor is reported);
+    - ``"mismatch"`` — the analysis predicted communication the
+      compiled module does not perform; this is the only level that
+      raises an error finding.
+
+    Kinds where both sides stay under ``abs_floor`` bytes are ignored
+    (bookkeeping noise).  Mismatching kinds are attributed to the
+    predicted ops contributing the most bytes.
+
+    Args:
+        predicted: :func:`predicted_collectives` output.
+        emitted: ``{hlo kind: bytes}`` from
+            ``repro.launch.hlo_analysis.summarize`` (loop-aware).
+        unknown_dtypes: dtypes the HLO parser could not size (their
+            buffers counted 0 bytes — the emitted side may undercount).
+        emitted_top: optional ``top_collectives`` rows for attribution.
+        rel_tol: relative byte tolerance per comparison.
+        abs_floor: ignore kinds below this many bytes on both sides.
+
+    Returns:
+        A JSON-friendly dict: ``match`` level, per-kind rows, per-class
+        rows, totals, attribution, and the options used.
+    """
+    pred = predicted_hlo_bytes(predicted)
+    emit = {k: float(v) for k, v in (emitted or {}).items()}
+    kinds = sorted(set(pred) | set(emit))
+
+    kind_rows = []
+    exact = True
+    for k in kinds:
+        p, e = pred.get(k, 0.0), emit.get(k, 0.0)
+        ok = _agree(p, e, rel_tol, abs_floor)
+        significant = max(p, e) >= abs_floor
+        if significant and not ok:
+            exact = False
+        kind_rows.append({
+            "kind": k, "predicted": p, "emitted": e,
+            "ratio": (e / p) if p > 0 else None,
+            "significant": significant, "ok": ok})
+
+    classes: dict[str, list[float]] = {}
+    for k in kinds:
+        cls = KIND_CLASSES.get(k, k)
+        row = classes.setdefault(cls, [0.0, 0.0])
+        row[0] += pred.get(k, 0.0)
+        row[1] += emit.get(k, 0.0)
+    class_rows = []
+    class_ok = True
+    for cls in sorted(classes):
+        p, e = classes[cls]
+        ok = _agree(p, e, rel_tol, abs_floor)
+        if max(p, e) >= abs_floor and not ok:
+            class_ok = False
+        class_rows.append({"class": cls, "predicted": p, "emitted": e,
+                           "ok": ok})
+
+    p_tot, e_tot = sum(pred.values()), sum(emit.values())
+    total_ok = _agree(p_tot, e_tot, rel_tol, abs_floor)
+    covered = (_covered(p_tot, e_tot, rel_tol, abs_floor)
+               and all(_covered(p, e, rel_tol, abs_floor)
+                       for p, e in classes.values()))
+    match = ("exact" if exact else "class" if class_ok
+             else "total" if total_ok
+             else "covered" if covered else "mismatch")
+    surplus = (e_tot / p_tot) if p_tot >= abs_floor else None
+
+    attribution: dict[str, list] = {}
+    for row in kind_rows:
+        if row["ok"] or not row["significant"]:
+            continue
+        k = row["kind"]
+        contrib = [p for p in predicted
+                   if _HLO_KIND.get(p.kind, p.kind) == k]
+        contrib.sort(key=lambda p: -p.result_bytes * p.trip)
+        attribution[k] = [
+            {"op": p.op, "prim": p.prim, "vid": p.vid,
+             "axes": list(p.axes), "trip": p.trip,
+             "bytes": p.result_bytes * p.trip} for p in contrib[:8]]
+    if attribution and emitted_top:
+        attribution["emitted_top"] = [
+            {"weighted_bytes": w, "kind": k, "bytes": b, "mult": m,
+             "op_name": name}
+            for (w, k, b, m, name) in emitted_top[:8]]
+
+    return {
+        "match": match,
+        "kinds": kind_rows,
+        "classes": class_rows,
+        "total": {"predicted": p_tot, "emitted": e_tot, "ok": total_ok,
+                  "surplus_factor": surplus},
+        "attribution": attribution,
+        "unknown_dtypes": sorted(unknown_dtypes or ()),
+        "options": {"rel_tol": rel_tol, "abs_floor": abs_floor},
+    }
+
+
+def attach_conformance(report: VerifyReport, conf: dict) -> VerifyReport:
+    """Fold a conformance result into a report (findings included).
+
+    Args:
+        report: the static :func:`verify_state` report to extend.
+        conf: a :func:`conformance_check` result.
+
+    Returns:
+        The same report, with ``conformance`` set and a "conformance"
+        finding appended on mismatch (plus a warning when the HLO parser
+        met unknown dtypes).
+    """
+    report.conformance = conf
+    t = conf.get("total", {})
+    if conf.get("match") == "mismatch":
+        bad = [r["kind"] for r in conf.get("kinds", [])
+               if r["significant"] and not r["ok"]
+               and r["predicted"] > r["emitted"]]
+        report.findings.append(Finding(
+            "conformance", -1, "error",
+            f"static analysis predicted collectives the compiled HLO "
+            f"does not carry (kinds over-predicted: {bad}; total "
+            f"predicted {t.get('predicted', 0.0):.0f} vs emitted "
+            f"{t.get('emitted', 0.0):.0f} bytes)"))
+    elif conf.get("match") == "covered":
+        surplus = t.get("surplus_factor")
+        sev = ("warning" if surplus is not None
+               and surplus > CONF_SURPLUS_WARN else "info")
+        report.findings.append(Finding(
+            "conformance", -1, sev,
+            f"predicted collectives covered by compiled HLO; GSPMD "
+            f"adds {t.get('emitted', 0.0) - t.get('predicted', 0.0):.0f}"
+            f" bytes of propagation traffic"
+            + (f" ({surplus:.1f}x the analytic multiset"
+               f" — see docs/verify.md)" if surplus is not None
+               else " (see docs/verify.md)")))
+    elif conf.get("match") != "exact":
+        report.findings.append(Finding(
+            "conformance", -1, "info",
+            f"collectives match at the {conf['match']!r} level (GSPMD "
+            f"kind substitution — see docs/verify.md)"))
+    if conf.get("unknown_dtypes"):
+        report.findings.append(Finding(
+            "conformance", -1, "warning",
+            f"HLO parser met unknown dtypes {conf['unknown_dtypes']} "
+            f"(emitted bytes may be undercounted)"))
+    report.sort()
+    return report

@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
+import warnings
 from collections import defaultdict
 
 _DTYPE_BYTES = {"bf16": 2, "f16": 2, "f32": 4, "f64": 8, "s8": 1, "u8": 1,
@@ -28,6 +29,38 @@ _DTYPE_BYTES = {"bf16": 2, "f16": 2, "f32": 4, "f64": 8, "s8": 1, "u8": 1,
                 "pred": 1, "c64": 8, "c128": 16, "f8e4m3fn": 1,
                 "f8e5m2": 1, "s4": 1, "u4": 1, "token": 0,
                 "opaque": 0, "tuple": 0}
+
+# dtypes already warned about (process-wide: one warning per unknown
+# dtype, however many HLO modules are parsed)
+_WARNED_DTYPES: set[str] = set()
+
+
+def _dtype_bytes(dtype: str, unknown: set[str] | None = None) -> int:
+    """Bytes per element of one dtype token.
+
+    Unknown dtypes count 0 bytes (they used to do so *silently*, which
+    let conformance checks be quietly under-counted) — now each unknown
+    dtype warns once per process and is recorded in ``unknown`` so
+    results can expose the gap.
+
+    Args:
+        dtype: the dtype token from a shape (e.g. ``"bf16"``).
+        unknown: optional accumulator for unrecognized dtype names.
+
+    Returns:
+        Bytes per element, 0 when the dtype is unknown.
+    """
+    b = _DTYPE_BYTES.get(dtype)
+    if b is None:
+        if unknown is not None:
+            unknown.add(dtype)
+        if dtype not in _WARNED_DTYPES:
+            _WARNED_DTYPES.add(dtype)
+            warnings.warn(
+                f"hlo_analysis: unknown dtype {dtype!r} counted as 0 "
+                f"bytes (extend _DTYPE_BYTES)", stacklevel=3)
+        return 0
+    return b
 
 _SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
 _INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
@@ -44,23 +77,23 @@ _COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                 "collective-permute")
 
 
-def _shapes_bytes(text: str) -> int:
+def _shapes_bytes(text: str, unknown: set[str] | None = None) -> int:
     total = 0
     for m in _SHAPE_RE.finditer(text):
         n = 1
         for d in m.group(2).split(","):
             if d:
                 n *= int(d)
-        total += n * _DTYPE_BYTES.get(m.group(1), 0)
+        total += n * _dtype_bytes(m.group(1), unknown)
     return total
 
 
-def _first_shape(text: str):
+def _first_shape(text: str, unknown: set[str] | None = None):
     m = _SHAPE_RE.search(text)
     if not m:
         return None, 0
     dims = tuple(int(d) for d in m.group(2).split(",") if d)
-    return dims, _DTYPE_BYTES.get(m.group(1), 0)
+    return dims, _dtype_bytes(m.group(1), unknown)
 
 
 @dataclasses.dataclass
@@ -125,6 +158,7 @@ def parse_hlo(text: str) -> dict[str, Computation]:
     cur: Computation | None = None
     shapes: dict[str, tuple] = {}
     entry_name = None
+    unknown: set[str] = set()
     for raw in text.splitlines():
         line = raw.rstrip()
         if line.endswith("{"):
@@ -136,7 +170,7 @@ def parse_hlo(text: str) -> dict[str, Computation]:
                     entry_name = cur.name
                 shapes = {}
                 for pm in _PARAM_RE.finditer(mh.group(2)):
-                    dims, _ = _first_shape(pm.group(2))
+                    dims, _ = _first_shape(pm.group(2), unknown)
                     if dims is not None:
                         shapes[pm.group(1)] = dims
                 continue
@@ -149,11 +183,11 @@ def parse_hlo(text: str) -> dict[str, Computation]:
         # result shape: first shape token(s) before the op name
         mop = _OP_RE.search(rest)
         op = mop.group(1) if mop else ""
-        result_shape, dbytes = _first_shape(rest)
+        result_shape, dbytes = _first_shape(rest, unknown)
         if result_shape is not None:
             shapes[name] = result_shape
-        result_bytes = _shapes_bytes(rest.split(op + "(", 1)[0]) \
-            if op else _shapes_bytes(rest)
+        result_bytes = _shapes_bytes(rest.split(op + "(", 1)[0], unknown) \
+            if op else _shapes_bytes(rest, unknown)
         # HBM traffic: top-level buffer writes only.  Bookkeeping ops are
         # aliases, and instructions inside *fused* computations stay in
         # registers/VMEM (the walk skips fusion bodies for bytes).
@@ -194,6 +228,7 @@ def parse_hlo(text: str) -> dict[str, Computation]:
                         cur.calls.append((cn, kind))
     comps["__entry__"] = comps.get(entry_name, Computation("__entry__"))
     comps["__entry_name__"] = entry_name       # type: ignore
+    comps["__unknown_dtypes__"] = unknown      # type: ignore
     return comps
 
 
@@ -203,12 +238,17 @@ class HloSummary:
     bytes_rw: float
     coll_bytes: dict
     while_trips: dict
+    # dtypes the parser could not size (counted 0 bytes) — consumers
+    # (e.g. the conformance check) surface these instead of silently
+    # under-counting
+    unknown_dtypes: tuple = ()
 
 
 def summarize(text: str) -> HloSummary:
     comps = parse_hlo(text)
     entry = comps.pop("__entry_name__")        # type: ignore
     comps.pop("__entry__", None)
+    unknown = comps.pop("__unknown_dtypes__", set())
 
     totals = {"flops": 0.0, "bytes": 0.0}
     coll: dict[str, float] = defaultdict(float)
@@ -249,7 +289,8 @@ def summarize(text: str) -> HloSummary:
     if entry:
         walk(entry, 1.0, True)
     return HloSummary(flops=totals["flops"], bytes_rw=totals["bytes"],
-                      coll_bytes=dict(coll), while_trips=trips_seen)
+                      coll_bytes=dict(coll), while_trips=trips_seen,
+                      unknown_dtypes=tuple(sorted(unknown)))
 
 
 def top_collectives(text: str, n: int = 12):
@@ -258,6 +299,7 @@ def top_collectives(text: str, n: int = 12):
     comps = parse_hlo(text)
     entry = comps.pop("__entry_name__")        # type: ignore
     comps.pop("__entry__", None)
+    comps.pop("__unknown_dtypes__", None)
     mults: dict[str, float] = {}
 
     def trip_of(cond_name):

@@ -59,7 +59,10 @@ def run_worker_job(job: dict) -> dict:
 
     Args:
         job: ``{"arch", "shape": {...}, "reduced", "plan":
-            ShardingPlan.as_dict(), "repeats", "warmup"}``.
+            ShardingPlan.as_dict(), "repeats", "warmup"}``; optional
+            ``"mode": "hlo"`` stops after lower+compile and returns the
+            compiled module's collective traffic
+            (``repro.launch.hlo_analysis``) instead of timing runs.
 
     Returns:
         A JSON-friendly result dict; ``result["status"]`` is "ok",
@@ -96,7 +99,16 @@ def run_worker_job(job: dict) -> dict:
 
     t0 = time.perf_counter()
     try:
-        lowered = applied.lower(*args)
+        # trace under the ambient mesh + the plan's logical rules so the
+        # models' ``constrain`` hooks pin *intermediate* shardings to the
+        # plan's internal assignment — without them GSPMD propagates the
+        # body from the in/out shardings alone and can diverge from the
+        # plan (and from the predicted collective multiset)
+        from repro.launch.mesh import mesh_context
+        from repro.models.sharding import logical_rules
+        with mesh_context(mesh), \
+                logical_rules(plan.logical_rules or None):
+            lowered = applied.lower(*args)
         compiled = lowered.compile()
     except Exception as e:                          # noqa: BLE001
         status = _classify(e)
@@ -115,6 +127,21 @@ def run_worker_job(job: dict) -> dict:
                                 mem.output_size_in_bytes)
     except Exception:                               # noqa: BLE001
         result["peak_bytes"] = None                 # analysis unavailable
+
+    if job.get("mode") == "hlo":
+        # conformance harvest: parse the compiled module's collective
+        # traffic (loop-aware) and return — no timed execution
+        from repro.launch.hlo_analysis import summarize, top_collectives
+        text = compiled.as_text()
+        s = summarize(text)
+        result["coll_bytes"] = s.coll_bytes
+        result["unknown_dtypes"] = list(s.unknown_dtypes)
+        result["while_trips"] = s.while_trips
+        result["hlo_flops"] = s.flops
+        result["hlo_bytes_rw"] = s.bytes_rw
+        result["top_collectives"] = [list(t) for t in
+                                     top_collectives(text)]
+        return result
 
     # concrete inputs: zeros everywhere (runtime arguments, so XLA cannot
     # constant-fold them; tokens index row 0 of the embedding table)
@@ -193,11 +220,47 @@ def measure_plan(arch: str, shape, plan, *, reduced: bool = True,
                  "global_batch": shape.global_batch, "kind": shape.kind}
     job = {"arch": arch, "shape": shape, "reduced": reduced,
            "plan": plan.as_dict(), "repeats": repeats, "warmup": warmup}
+    return _run_worker_subprocess(job, plan.mesh.num_devices, timeout)
+
+
+def hlo_for_plan(arch: str, shape, plan, *, reduced: bool = True,
+                 timeout: float = 900.0) -> dict:
+    """Harvest a plan's compiled-HLO collective traffic in a subprocess.
+
+    The conformance half of the static verifier needs the collectives
+    XLA actually emits, which requires lowering under the plan's full
+    device count — hence the same forced-device-count subprocess
+    isolation as :func:`measure_plan`, but stopping after compile (no
+    timed execution).
+
+    Args:
+        arch: zoo config id (the worker rebuilds the step function).
+        shape: ``ShapeConfig`` (or dict) of the traced cell.
+        plan: the ``ShardingPlan`` to lower.
+        reduced: run the ``reduced()`` (CPU-smoke) config.
+        timeout: subprocess wall-clock budget, seconds.
+
+    Returns:
+        The worker result: "status", "coll_bytes" (``{kind: bytes}``,
+        loop-aware), "unknown_dtypes", "top_collectives",
+        "while_trips", "compile_s", "peak_bytes", "error".
+    """
+    if not isinstance(shape, dict):
+        shape = {"name": shape.name, "seq_len": shape.seq_len,
+                 "global_batch": shape.global_batch, "kind": shape.kind}
+    job = {"arch": arch, "shape": shape, "reduced": reduced,
+           "plan": plan.as_dict(), "mode": "hlo"}
+    return _run_worker_subprocess(job, plan.mesh.num_devices, timeout)
+
+
+def _run_worker_subprocess(job: dict, num_devices: int,
+                           timeout: float) -> dict:
+    """Run one worker job in a forced-device-count subprocess."""
     cmd = [sys.executable, "-m", "repro.launch.measure", "--worker"]
     try:
         proc = subprocess.run(
             cmd, input=json.dumps(job).encode(), capture_output=True,
-            env=_worker_env(plan.mesh.num_devices), timeout=timeout)
+            env=_worker_env(num_devices), timeout=timeout)
     except subprocess.TimeoutExpired:
         return {"status": "timeout",
                 "error": f"worker exceeded {timeout}s"}
@@ -252,7 +315,7 @@ def measure_record(record: dict, captures: dict, *, repeats: int = 5,
     """
     from repro.core.measure import (MeasuredCell, candidate_states,
                                     fit_hardware, mean_relative_error,
-                                    spearman)
+                                    spearman, verify_gate)
 
     mesh_str = "x".join(str(s) for s in record["mesh"]["sizes"])
     shape = dict(record["shape"])
@@ -276,9 +339,18 @@ def measure_record(record: dict, captures: dict, *, repeats: int = 5,
                 predicted_s=feats["runtime"],
                 predicted_peak_bytes=feats["peak_bytes"],
                 features=feats)
-            res = measure_plan(arch, shape, vplan, reduced=reduced,
-                               repeats=repeats, warmup=warmup,
-                               timeout=timeout)
+            # soundness gate: never burn a subprocess on a plan the
+            # static verifier can prove is structurally wrong
+            blocking = verify_gate(cm, state, plan=vplan)
+            if blocking:
+                res = {"status": "verify_failed",
+                       "error": "; ".join(
+                           f"[{f.rule}] {f.message}"
+                           for f in blocking[:4])[:500]}
+            else:
+                res = measure_plan(arch, shape, vplan, reduced=reduced,
+                                   repeats=repeats, warmup=warmup,
+                                   timeout=timeout)
             cell.status = res.get("status", "error")
             cell.error = res.get("error", "")
             cell.devices = res.get("devices", 0)

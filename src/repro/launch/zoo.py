@@ -325,6 +325,149 @@ def run_zoo(mesh: MeshSpec, *, archs: tuple[str, ...] | None = None,
     return record
 
 
+# -- static verification ------------------------------------------------------
+
+def verify_record(record: dict, captures: dict, *,
+                  timeout: float = 900.0, conformance: bool = True,
+                  verbose: bool = True) -> dict:
+    """Statically verify every captured plan + conform against real HLO.
+
+    For each model the sweep partitioned, the full
+    ``repro.core.verify`` rule set runs over the searched plan, and —
+    unless ``conformance`` is off — the plan is lowered and compiled in
+    a forced-device-count subprocess
+    (``repro.launch.measure.hlo_for_plan``) so the predicted collective
+    multiset can be matched against the collectives XLA actually
+    emitted.
+
+    Args:
+        record: the ``run_zoo`` sweep record (supplies shape/mesh).
+        captures: ``{arch: (session, request, plan)}`` from the sweep.
+        timeout: per-model HLO-harvest subprocess budget, seconds.
+        conformance: harvest compiled HLO and run the conformance
+            check (pure static rules only when off).
+        verbose: print one line per verified model.
+
+    Returns:
+        The verify record written to ``BENCH_verify.json``: per-model
+        findings + conformance, and a summary with the failure list
+        (models with error findings or a conformance mismatch).
+    """
+    from repro.api import Finding
+    from repro.launch.measure import hlo_for_plan
+
+    shape = dict(record["shape"])
+    reduced = not record.get("full_configs", False)
+    rows: list[dict] = []
+    failures: list[str] = []
+    for arch, (sess, request, plan) in captures.items():
+        hlo = None
+        harvest: dict = {}
+        if conformance:
+            harvest = hlo_for_plan(arch, shape, plan, reduced=reduced,
+                                   timeout=timeout)
+            if harvest.get("status") == "ok":
+                hlo = {"coll_bytes": harvest.get("coll_bytes", {}),
+                       "unknown_dtypes":
+                           harvest.get("unknown_dtypes", []),
+                       "top_collectives":
+                           [tuple(t) for t in
+                            harvest.get("top_collectives", [])]}
+        report = sess.verify(
+            request, plan, hlo=hlo,
+            conformance="auto" if hlo is not None else False)
+        if conformance and hlo is None:
+            report.findings.append(Finding(
+                "conformance", -1, "warning",
+                f"HLO harvest failed "
+                f"({harvest.get('status', 'skipped')}): "
+                f"{harvest.get('error', '')[:200]}"))
+            report.sort()
+        row = {"model": arch,
+               "mesh": "x".join(str(s) for s in plan.mesh.sizes),
+               "harvest_status": harvest.get("status", "off"),
+               "harvest_compile_s": harvest.get("compile_s", 0.0),
+               **report.as_dict()}
+        rows.append(row)
+        if not report.ok:
+            match = (report.conformance or {}).get("match", "-")
+            failures.append(
+                f"{arch}: {len(report.errors)} error finding(s), "
+                f"conformance={match}")
+        if verbose:
+            conf = (report.conformance or {}).get("match", "-")
+            print(f"[verify {arch:>16}] "
+                  f"{'ok ' if report.ok else 'FAIL'} "
+                  f"errors={len(report.errors)} "
+                  f"warnings={len(report.warnings)} "
+                  f"conformance={conf}", flush=True)
+    matches: dict[str, int] = {}
+    for r in rows:
+        m = (r.get("conformance") or {}).get("match", "none")
+        matches[m] = matches.get(m, 0) + 1
+    return {
+        "mesh": record["mesh"],
+        "shape": shape,
+        "full_configs": record.get("full_configs", False),
+        "results": rows,
+        "summary": {"n_models": len(rows),
+                    "n_ok": sum(r["ok"] for r in rows),
+                    "conformance_matches": matches},
+        "failures": failures,
+    }
+
+
+_VERIFY_COLUMNS = ("model", "ok", "errors", "warnings", "conformance",
+                   "pred_coll_mb", "emit_coll_mb", "harvest")
+
+
+def format_verify_table(vrec: dict) -> str:
+    """Render a verify record as an aligned per-model findings table.
+
+    Args:
+        vrec: the :func:`verify_record` result.
+
+    Returns:
+        A printable multi-line table, followed by every non-info
+        finding of failing models.
+    """
+    table = [list(_VERIFY_COLUMNS)]
+    for r in vrec["results"]:
+        counts = r.get("counts", {})
+        conf = r.get("conformance") or {}
+        tot = conf.get("total", {})
+        table.append([
+            r["model"],
+            "yes" if r["ok"] else "NO",
+            str(counts.get("error", 0)),
+            str(counts.get("warning", 0)),
+            conf.get("match", "-"),
+            (f"{tot['predicted'] / 2**20:.2f}"
+             if "predicted" in tot else "-"),
+            (f"{tot['emitted'] / 2**20:.2f}"
+             if "emitted" in tot else "-"),
+            r.get("harvest_status", "-"),
+        ])
+    widths = [max(len(row[i]) for row in table)
+              for i in range(len(_VERIFY_COLUMNS))]
+    lines = []
+    for j, row in enumerate(table):
+        lines.append("  ".join(c.rjust(w) for c, w in zip(row, widths)))
+        if j == 0:
+            lines.append("  ".join("-" * w for w in widths))
+    for r in vrec["results"]:
+        bad = [f for f in r.get("findings", [])
+               if f["severity"] in ("error", "warning")]
+        if not r["ok"] and bad:
+            lines.append(f"\n[{r['model']}] findings:")
+            for f in bad[:12]:
+                op = f["op"] if f["op"] >= 0 else "-"
+                lines.append(f"  {f['severity'].upper():<7} "
+                             f"{f['rule']:<22} op={op:<4} "
+                             f"{f['message']}")
+    return "\n".join(lines)
+
+
 # -- mesh-shape co-search -----------------------------------------------------
 
 def fixed_2d_meshes(devices: int) -> list[MeshSpec]:
@@ -783,6 +926,15 @@ def main(argv: list[str] | None = None) -> dict:
                          "print per-model phase wall/alloc breakdowns "
                          "plus the hottest functions (slower; for "
                          "diagnosis, not benchmarking)")
+    ap.add_argument("--verify", action="store_true",
+                    help="statically verify every searched plan "
+                         "(soundness rules) and match the predicted "
+                         "collective multiset against compiled-HLO "
+                         "collectives; write --verify-out")
+    ap.add_argument("--verify-out", default="BENCH_verify.json")
+    ap.add_argument("--no-conformance", action="store_true",
+                    help="with --verify: skip the compiled-HLO "
+                         "conformance harvest (pure static rules only)")
     ap.add_argument("--measure", action="store_true",
                     help="execute plan variants on a simulated device "
                          "mesh, calibrate the cost model, write "
@@ -875,7 +1027,8 @@ def main(argv: list[str] | None = None) -> dict:
                 print(f"CO-SEARCH FAILED {f}")
             raise SystemExit(1)
         return record
-    captures: dict | None = {} if args.measure else None
+    captures: dict | None = \
+        {} if (args.measure or args.verify) else None
     profiler = None
     if args.profile:
         import cProfile
@@ -913,6 +1066,25 @@ def main(argv: list[str] | None = None) -> dict:
     out = pathlib.Path(args.out)
     out.write_text(json.dumps(record, indent=2))
     print(f"wrote {out}")
+
+    verify_failed = False
+    if args.verify:
+        print("\nverifying searched plans (static soundness + "
+              "compiled-HLO conformance) ...", flush=True)
+        vrec = verify_record(
+            record, captures or {},
+            timeout=args.measure_timeout,
+            conformance=not args.no_conformance)
+        print()
+        print(format_verify_table(vrec))
+        vout = pathlib.Path(args.verify_out)
+        vout.write_text(json.dumps(vrec, indent=2))
+        print(f"wrote {vout}")
+        record["verified"] = vrec
+        if vrec["failures"]:
+            for f in vrec["failures"]:
+                print(f"VERIFY FAILED {f}")
+            verify_failed = True
 
     measure_failed = False
     if args.measure:
@@ -957,7 +1129,7 @@ def main(argv: list[str] | None = None) -> dict:
                       f"{c['error'][:200]}")
             measure_failed = True
 
-    if measure_failed or \
+    if measure_failed or verify_failed or \
             any(r["status"] != "ok" for r in record["results"]):
         raise SystemExit(1)
     return record

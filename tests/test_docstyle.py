@@ -27,6 +27,7 @@ DOC_GATED_FILES = [
     "src/repro/core/measure.py",
     "src/repro/launch/measure.py",
     "src/repro/core/mesh_search.py",
+    "src/repro/core/verify.py",
 ]
 
 RULES = "D101,D102,D103,D417"

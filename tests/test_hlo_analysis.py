@@ -1,0 +1,178 @@
+"""Direct unit tests for the compiled-HLO text parser (Issue 8).
+
+The parser (``repro.launch.hlo_analysis``) previously only had indirect
+coverage through dry-run/measure smoke tests; the conformance pass now
+leans on its collective byte counts, so its conventions get pinned down
+here: the dtype table (including the f8/s4 narrow types), while-loop
+trip multiplication, fusion/call attribution, and the unknown-dtype
+warn-once + exposure behavior.
+"""
+
+import warnings
+
+import pytest
+
+from repro.launch.hlo_analysis import (_DTYPE_BYTES, _dtype_bytes,
+                                       _first_shape, _shapes_bytes,
+                                       parse_hlo, summarize,
+                                       top_collectives)
+
+# --- dtype table -------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype,nbytes", [
+    ("f32", 4), ("bf16", 2), ("f16", 2), ("f64", 8),
+    ("f8e4m3fn", 1), ("f8e5m2", 1), ("s4", 1), ("u4", 1),
+    ("s8", 1), ("s32", 4), ("s64", 8), ("pred", 1),
+    ("c64", 8), ("c128", 16), ("token", 0), ("tuple", 0),
+])
+def test_dtype_table(dtype, nbytes):
+    assert _DTYPE_BYTES[dtype] == nbytes
+    assert _dtype_bytes(dtype) == nbytes
+
+
+def test_shapes_bytes_sums_every_shape_token():
+    assert _shapes_bytes("f32[4,2]") == 32
+    assert _shapes_bytes("(f32[4,2], bf16[8])") == 32 + 16
+    assert _shapes_bytes("s4[16]") == 16          # 1 byte/elem convention
+    assert _shapes_bytes("f32[]") == 4            # scalar
+
+
+def test_first_shape_returns_dims_and_elem_bytes():
+    dims, b = _first_shape("f8e4m3fn[3,5] dot(...)")
+    assert dims == (3, 5)
+    assert b == 1
+    dims, b = _first_shape("no shapes here")
+    assert dims is None and b == 0
+
+
+# --- unknown dtypes (satellite: warn once + expose) --------------------------
+
+
+def test_unknown_dtype_warns_once_and_is_exposed():
+    text = """\
+ENTRY %main (x: zz9q[8]) -> zz9q[8] {
+  %x = zz9q[8] parameter(0)
+  ROOT %n = zz9q[8] negate(%x)
+}
+"""
+    with pytest.warns(UserWarning, match="zz9q"):
+        s = summarize(text)
+    assert s.unknown_dtypes == ("zz9q",)
+    assert s.bytes_rw == 0.0                      # counted as 0 bytes
+    # second parse of the same dtype: recorded again, but no new warning
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        s2 = summarize(text)
+    assert s2.unknown_dtypes == ("zz9q",)
+
+
+def test_known_dtypes_do_not_warn():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert _dtype_bytes("f32") == 4
+
+
+def test_parse_hlo_exposes_unknown_dtype_set():
+    comps = parse_hlo("ENTRY %m (x: qq7[4]) -> qq7[4] {\n"
+                      "  ROOT %x = qq7[4] parameter(0)\n}\n")
+    assert comps["__unknown_dtypes__"] == {"qq7"}
+
+
+# --- while trip multiplication -----------------------------------------------
+
+WHILE_HLO = """\
+%body (param: (s32[], f32[16])) -> (s32[], f32[16]) {
+  %param = (s32[], f32[16]) parameter(0)
+  %gte = f32[16] get-tuple-element(%param), index=1
+  %ar = f32[16] all-reduce(%gte), replica_groups={}, to_apply=%add
+  %i = s32[] get-tuple-element(%param), index=0
+  ROOT %tup = (s32[], f32[16]) tuple(%i, %ar)
+}
+
+%cond (param: (s32[], f32[16])) -> pred[] {
+  %param = (s32[], f32[16]) parameter(0)
+  %i = s32[] get-tuple-element(%param), index=0
+  %n = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (x: (s32[], f32[16])) -> (s32[], f32[16]) {
+  %x = (s32[], f32[16]) parameter(0)
+  ROOT %w = (s32[], f32[16]) while(%x), condition=%cond, body=%body
+}
+"""
+
+
+def test_while_trip_multiplies_collectives():
+    s = summarize(WHILE_HLO)
+    # 16 f32 = 64 bytes per iteration, trip 5 from constant(5) in %cond
+    assert s.coll_bytes["all-reduce"] == 64 * 5
+    assert s.while_trips == {"body": 5}
+
+
+def test_while_trip_multiplies_top_collectives():
+    items = top_collectives(WHILE_HLO)
+    assert len(items) == 1
+    weighted, kind, b, mult, _name = items[0]
+    assert (kind, b, mult, weighted) == ("all-reduce", 64, 5.0, 320.0)
+
+
+# --- fusion / call attribution ----------------------------------------------
+
+FUSION_HLO = """\
+%fused (p0: f32[8,4], p1: f32[4,8]) -> f32[8,8] {
+  %p0 = f32[8,4] parameter(0)
+  %p1 = f32[4,8] parameter(1)
+  ROOT %d = f32[8,8] dot(%p0, %p1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+
+ENTRY %main (a: f32[8,4], b: f32[4,8]) -> f32[8,8] {
+  %a = f32[8,4] parameter(0)
+  %b = f32[4,8] parameter(1)
+  ROOT %f = f32[8,8] fusion(%a, %b), kind=kOutput, calls=%fused
+}
+"""
+
+
+def test_fusion_attributes_flops_but_not_internal_bytes():
+    s = summarize(FUSION_HLO)
+    assert s.flops == 2.0 * 8 * 8 * 4         # dot inside the fusion
+    # only the fusion's top-level result buffer hits HBM
+    assert s.bytes_rw == 8 * 8 * 4
+
+
+CALL_HLO = """\
+%callee (p: f32[8,4]) -> f32[8,4] {
+  %p = f32[8,4] parameter(0)
+  ROOT %n = f32[8,4] negate(%p)
+}
+
+ENTRY %main (a: f32[8,4]) -> f32[8,4] {
+  %a = f32[8,4] parameter(0)
+  ROOT %c = f32[8,4] call(%a), to_apply=%callee
+}
+"""
+
+
+def test_call_attributes_bytes():
+    s = summarize(CALL_HLO)
+    # call result (entry) + negate result (callee body) both count
+    assert s.bytes_rw == 2 * (8 * 4 * 4)
+
+
+def test_dot_flops_use_lhs_contracting_dims():
+    comps = parse_hlo(FUSION_HLO)
+    assert comps["fused"].flops == 2.0 * 8 * 8 * 4
+
+
+def test_entry_detection():
+    comps = parse_hlo(FUSION_HLO)
+    assert comps["__entry_name__"] == "main"
+    assert comps["__entry__"].name == "main"

@@ -1,0 +1,381 @@
+"""Static verifier + conformance tests (Issue 8).
+
+Fault injection per rule category: every soundness rule must fire on a
+plan corrupted in exactly its failure mode (and attribute the finding to
+the right op), the measure gate must block unsound plans but wave
+through merely-infeasible ones, and the conformance matcher's five
+levels must classify fabricated predicted/emitted multisets correctly.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.api import Finding, Forbid, Pin, Request, Session
+from repro.core.constraints import ConstraintError
+from repro.core.cost_model import HardwareSpec, MeshSpec, ShardingState
+from repro.core.measure import verify_gate
+from repro.core.partitioner import CheckResult, Violation
+from repro.core.verify import (CONF_ABS_FLOOR, PredictedCollective,
+                               VerifyReport, attach_conformance,
+                               conformance_check, muted_groups,
+                               predicted_hlo_bytes, verify_state)
+from repro.launch.zoo import format_verify_table
+
+
+def sh(*s):
+    return jax.ShapeDtypeStruct(s, jnp.float32)
+
+
+def mlp(d):
+    return jax.nn.relu(d["x"] @ d["w1"]) @ d["w2"]
+
+
+# embed=10 on purpose: 10 = 2·5 divides by one mesh axis but not two,
+# giving the divisibility fault injection a real non-divisible dim
+ARGS = ({"x": sh(8, 10), "w1": sh(10, 16), "w2": sh(16, 10)},)
+MESH = MeshSpec(("data", "model"), (2, 2))
+
+
+@pytest.fixture(scope="module")
+def sess():
+    return Session(mlp, ARGS)
+
+
+@pytest.fixture(scope="module")
+def plan(sess):
+    return sess.partition(Request(mesh=MESH, min_dims=1,
+                                  backend="greedy"))
+
+
+@pytest.fixture(scope="module")
+def cm(sess, plan):
+    return sess._cost_model(plan.mesh, HardwareSpec())
+
+
+# --- clean plan --------------------------------------------------------------
+
+
+def test_clean_plan_verifies(sess, plan):
+    report = sess.verify(None, plan, conformance=False)
+    assert report.ok
+    assert not report.errors
+    assert report.peak_bytes > 0
+    assert not report.blocking()
+
+
+def test_exactness_oracle_agrees_on_searched_state(cm, plan):
+    report = verify_state(cm, plan.state, plan=plan)
+    assert not [f for f in report.findings
+                if f.rule == "collective-mismatch"]
+
+
+def test_verify_gate_passes_clean_plan(cm, plan):
+    assert verify_gate(cm, plan.state, plan=plan) == []
+
+
+def test_report_table_and_dict(sess, plan):
+    report = sess.verify(None, plan, conformance=False)
+    d = report.as_dict()
+    assert d["ok"] is True
+    assert d["peak_bytes"] == report.peak_bytes
+    assert isinstance(report.table(), str)
+
+
+# --- fault injection: collective-mismatch ------------------------------------
+
+
+def test_collective_mismatch_fires_with_op_attribution(cm, plan,
+                                                       monkeypatch):
+    orig = cm.recost
+
+    def tampered(op_indices, vids, color_axes, suppressed):
+        rows, vbytes = orig(op_indices, vids, color_axes, suppressed)
+        k = min(rows)
+        row = list(rows[k])
+        row[4] += 12345.0           # comm bytes the derivation can't see
+        rows[k] = tuple(row)
+        return rows, vbytes
+
+    monkeypatch.setattr(cm, "recost", tampered)
+    report = verify_state(cm, plan.state, plan=plan)
+    bad = [f for f in report.findings if f.rule == "collective-mismatch"]
+    assert bad
+    assert bad[0].severity == "error"
+    assert bad[0].op == 0               # the op whose row was corrupted
+    assert report.blocking()            # and the measure gate blocks it
+
+
+# --- fault injection: divisibility / spec-mismatch ---------------------------
+
+
+def test_divisibility_fires_on_corrupted_in_specs(cm, plan):
+    prog = cm.prog
+    target = next(i for i, vid in enumerate(prog.inputs)
+                  if 10 in prog.types[vid].shape)
+    shape = prog.types[prog.inputs[target]].shape
+    d = shape.index(10)
+    entries = [None] * len(shape)
+    entries[d] = ("data", "model")      # 10 % 4 != 0
+    bad_specs = list(plan.in_specs)
+    bad_specs[target] = P(*entries)
+    bad_plan = dataclasses.replace(plan, in_specs=bad_specs)
+
+    report = verify_state(cm, plan.state, plan=bad_plan)
+    div = [f for f in report.findings
+           if f.rule == "divisibility" and f.severity == "error"]
+    assert div and "not divisible" in div[0].message
+    # the recorded spec also no longer matches the state projection
+    assert any(f.rule == "spec-mismatch" for f in report.findings)
+    assert report.blocking()
+
+
+def test_spec_mismatch_fires_on_unknown_axis_in_spec(cm, plan):
+    bad_specs = list(plan.in_specs)
+    shape = cm.prog.types[cm.prog.inputs[0]].shape
+    bad_specs[0] = P(*(["ghost"] + [None] * (len(shape) - 1)))
+    bad_plan = dataclasses.replace(plan, in_specs=bad_specs)
+    report = verify_state(cm, plan.state, plan=bad_plan)
+    assert any(f.rule == "spec-mismatch" and "ghost" in f.message
+               for f in report.findings)
+
+
+# --- fault injection: memory -------------------------------------------------
+
+
+def test_memory_fires_on_tiny_budget_but_does_not_block(cm, plan):
+    tiny = dataclasses.replace(HardwareSpec(), hbm_per_chip=16.0)
+    report = verify_state(cm, plan.state, plan=plan, hw=tiny)
+    mem = [f for f in report.findings if f.rule == "memory"]
+    assert mem and mem[0].severity == "error"
+    assert mem[0].op == report.peak_op      # peak-op attribution
+    assert not report.ok
+    # memory is measurable on purpose: the gate does NOT block it
+    assert not report.blocking()
+
+
+def test_memory_fires_on_corrupted_breakdown(cm, plan):
+    bad = dataclasses.replace(
+        plan, breakdown={**plan.breakdown,
+                         "peak_bytes": plan.breakdown["peak_bytes"] * 3})
+    report = verify_state(cm, plan.state, plan=bad)
+    assert any(f.rule == "memory" and "breakdown" in f.message
+               for f in report.findings)
+
+
+# --- fault injection: state --------------------------------------------------
+
+
+def test_state_fires_on_unknown_mesh_axis(cm, plan):
+    color = plan.state.color_axes[0][0] if plan.state.color_axes else 0
+    bogus = ShardingState(color_axes=((color, ("bogus",)),))
+    report = verify_state(cm, bogus)
+    bad = [f for f in report.findings if f.rule == "state"]
+    assert bad and bad[0].severity == "error"
+    assert "bogus" in bad[0].message
+    assert verify_gate(cm, bogus) != []
+
+
+def test_state_warns_on_dead_color_assignment(cm):
+    dead = ShardingState(color_axes=((10 ** 9, ("data",)),))
+    report = verify_state(cm, dead)
+    assert any(f.rule == "state" and f.severity == "warning" and
+               "dead" in f.message for f in report.findings)
+
+
+# --- fault injection: constraint contradiction -------------------------------
+
+
+def test_constraint_contradiction_pin_vs_forbid(sess, plan):
+    req = Request(mesh=MESH, min_dims=1,
+                  constraints=(Pin("['x']", P("data", None)),
+                               Forbid("['x']", "data")))
+    report = sess.verify(req, plan, conformance=False)
+    assert any(f.rule == "constraint-contradiction"
+               for f in report.findings)
+    assert not report.ok
+
+
+def test_constraint_violation_reported(sess, plan):
+    sharded = next((path, spec[0])
+                   for path, spec in zip(plan.input_paths, plan.in_specs)
+                   if any(e is not None for e in spec)
+                   for _ in [0] if spec[0] is not None)
+    path, entry = sharded
+    axis = entry if isinstance(entry, str) else entry[0]
+    req = Request(mesh=MESH, min_dims=1,
+                  constraints=(Forbid(path, axis),))
+    report = sess.verify(req, plan, conformance=False)
+    assert any(f.rule in ("constraint", "constraint-contradiction")
+               and f.severity == "error" for f in report.findings)
+    assert report.blocking()
+
+
+# --- conformance matcher -----------------------------------------------------
+
+MB = float(1 << 20)
+
+
+def pc(kind, op=0, nbytes=MB, trip=1, vid=7, axes=("data",)):
+    return PredictedCollective(kind, op, "dot_general",
+                               -1 if kind == "all_reduce" else vid,
+                               tuple(axes), trip,
+                               comm_bytes=nbytes, result_bytes=nbytes)
+
+
+def test_conformance_exact():
+    conf = conformance_check([pc("all_reduce")], {"all-reduce": MB})
+    assert conf["match"] == "exact"
+
+
+def test_conformance_class_absorbs_kind_substitution():
+    conf = conformance_check([pc("all_reduce")],
+                             {"reduce-scatter": 0.9 * MB})
+    assert conf["match"] == "class"
+
+
+def test_conformance_total():
+    conf = conformance_check([pc("all_reduce")],
+                             {"all-gather": 0.9 * MB})
+    assert conf["match"] == "total"
+
+
+def test_conformance_covered_with_surplus():
+    conf = conformance_check([pc("all_reduce")], {"all-reduce": 10 * MB})
+    assert conf["match"] == "covered"
+    assert conf["total"]["surplus_factor"] == pytest.approx(10.0)
+
+
+def test_conformance_mismatch_on_overprediction():
+    conf = conformance_check([pc("all_reduce")], {})
+    assert conf["match"] == "mismatch"
+
+
+def test_conformance_floor_ignores_noise():
+    small = CONF_ABS_FLOOR / 4
+    conf = conformance_check([pc("all_reduce", nbytes=small)], {})
+    assert conf["match"] == "exact"
+
+
+def test_predicted_hlo_bytes_dedups_reshards_not_reduces():
+    # same value resharded identically at two use sites -> one emitted
+    # collective (XLA CSE); contracting all-reduces stay per-op
+    reshards = [pc("all_gather", op=1, vid=7),
+                pc("all_gather", op=2, vid=7)]
+    reduces = [pc("all_reduce", op=1), pc("all_reduce", op=2)]
+    out = predicted_hlo_bytes(reshards + reduces)
+    assert out["all-gather"] == MB
+    assert out["all-reduce"] == 2 * MB
+
+
+def test_attach_conformance_severities():
+    rep = VerifyReport()
+    attach_conformance(rep, conformance_check([pc("all_reduce")], {}))
+    assert not rep.ok
+    assert any(f.rule == "conformance" and f.severity == "error"
+               for f in rep.findings)
+
+    rep = VerifyReport()
+    attach_conformance(rep, conformance_check([pc("all_reduce")],
+                                              {"all-reduce": 10 * MB}))
+    assert rep.ok      # covered: surplus warns but does not fail
+    assert any(f.rule == "conformance" and f.severity == "warning"
+               for f in rep.findings)
+
+    rep = VerifyReport()
+    attach_conformance(rep, conformance_check([pc("all_reduce")],
+                                              {"all-reduce": 2 * MB}))
+    assert any(f.rule == "conformance" and f.severity == "info"
+               for f in rep.findings)
+
+
+def test_session_verify_with_fabricated_hlo_is_exact(sess, plan):
+    base = sess.verify(None, plan, conformance=False)
+    coll = predicted_hlo_bytes(base.predicted)
+    report = sess.verify(None, plan, hlo={"coll_bytes": coll})
+    assert report.conformance is not None
+    assert report.conformance["match"] == "exact"
+    assert report.ok
+
+
+def test_session_verify_accepts_hlo_text(sess, plan):
+    report = sess.verify(None, plan, hlo="ENTRY %m (x: f32[4]) -> f32[4] "
+                                         "{\n  ROOT %x = f32[4] "
+                                         "parameter(0)\n}\n")
+    assert report.conformance is not None   # empty but present
+
+
+# --- plan.check / CheckResult (satellite 2) ----------------------------------
+
+
+def _x_spec(plan):
+    return plan.in_specs[next(i for i, p in enumerate(plan.input_paths)
+                              if "'x'" in p)]
+
+
+def test_check_returns_truthy_empty_result_when_satisfied(plan):
+    res = plan.check((Pin("['x']", _x_spec(plan)),))
+    assert isinstance(res, CheckResult)
+    assert res          # back-compat: no violations is truthy
+    assert res.messages == []
+
+
+def test_check_raises_by_default_on_violation(plan):
+    entries = ["model" if e is None else None for e in _x_spec(plan)]
+    with pytest.raises(ConstraintError):
+        plan.check((Pin("['x']", P(*entries)),))
+
+
+def test_check_returns_violations_without_raising(plan):
+    entries = ["model" if e is None else None for e in _x_spec(plan)]
+    res = plan.check((Pin("['x']", P(*entries)),),
+                     raise_on_violation=False)
+    assert not res                      # violations -> falsy
+    assert len(res) == 1
+    assert isinstance(res[0], Violation)
+    assert res.messages and "x" in res.messages[0]
+    assert str(res[0]) == res[0].message
+
+
+def test_plan_verify_requires_session(plan):
+    with pytest.raises(ValueError, match="Session"):
+        plan.verify()
+
+
+def test_plan_verify_delegates(sess, plan):
+    report = plan.verify(sess, conformance=False)
+    assert isinstance(report, VerifyReport)
+    assert report.ok
+
+
+# --- muted_groups equivalence ------------------------------------------------
+
+
+def test_muted_groups_matches_cost_model(cm, plan):
+    for bits in (plan.state.bits, ()):
+        state = ShardingState(color_axes=plan.state.color_axes,
+                              bits=bits)
+        assert muted_groups(cm.analysis, state.bits) == \
+            frozenset(cm.suppressed_for(state.bits))
+
+
+# --- zoo table rendering -----------------------------------------------------
+
+
+def test_format_verify_table_renders_failures():
+    vrec = {"results": [
+        {"model": "m1", "ok": True, "counts": {},
+         "conformance": {"match": "exact",
+                         "total": {"predicted": MB, "emitted": MB}},
+         "harvest_status": "ok", "findings": []},
+        {"model": "m2", "ok": False, "counts": {"error": 1},
+         "conformance": None, "harvest_status": "off",
+         "findings": [Finding("state", -1, "error", "boom").as_dict()]},
+    ]}
+    out = format_verify_table(vrec)
+    assert "m1" in out and "m2" in out
+    assert "boom" in out
+    assert "exact" in out
