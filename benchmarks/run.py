@@ -26,6 +26,10 @@ Sections:
           mesh — per-phase analysis time, dense vs incremental
           evals/sec, real search, vectorized-analysis exactness oracle
           (writes BENCH_fullscale.json); opt-in, minutes of wall time.
+- guidance: learned-guidance transfer benchmark — train the policy/value
+          model on 8 zoo architectures, evaluate guided-vs-unguided
+          MCTS on the held-out archs and both full-size programs
+          (writes BENCH_guidance.json); opt-in, minutes of wall time.
 - kernels: Pallas kernel microbenchmarks (interpret mode) vs jnp oracle.
 """
 
@@ -217,9 +221,12 @@ def main() -> None:
     ap.add_argument("--section", default="all",
                     choices=["all", "fig8", "fig10", "nda", "search",
                              "zoo", "measure", "meshsearch", "fullscale",
-                             "kernels"])
+                             "guidance", "kernels"])
     ap.add_argument("--models", default=",".join(MODELS))
     ap.add_argument("--search-out", default="BENCH_search.json")
+    ap.add_argument("--search-guided", action="store_true",
+                    help="add guided-vs-unguided MCTS rows on the "
+                         "full-size programs to the search section")
     ap.add_argument("--zoo-out", default="BENCH_zoo.json")
     ap.add_argument("--zoo-mesh", default="4x2")
     ap.add_argument("--zoo-plan-store", default="",
@@ -236,6 +243,10 @@ def main() -> None:
     ap.add_argument("--fullscale-smoke", action="store_true",
                     help="fullscale CI mode: analyze one config, no "
                          "search, enforce oracle + baseline gates")
+    ap.add_argument("--guidance-out", default="BENCH_guidance.json")
+    ap.add_argument("--guidance-smoke", action="store_true",
+                    help="guidance CI mode: two reduced configs, tiny "
+                         "model, in-distribution eval only")
     args = ap.parse_args()
     models = tuple(args.models.split(","))
     print("name,us_per_call,derived")
@@ -247,7 +258,8 @@ def main() -> None:
         nda_latency()
     if args.section in ("all", "search"):
         from benchmarks import search_throughput
-        search_throughput.run(out=args.search_out)
+        search_throughput.run(out=args.search_out,
+                              guided=args.search_guided)
     if args.section in ("all", "zoo"):
         zoo_sweep(out=args.zoo_out, mesh=args.zoo_mesh,
                   plan_store=args.zoo_plan_store or None)
@@ -262,6 +274,9 @@ def main() -> None:
         from benchmarks import fullscale
         fullscale.run(out=args.fullscale_out, mesh=args.fullscale_mesh,
                       smoke=args.fullscale_smoke)
+    if args.section == "guidance":      # opt-in: trains + full programs
+        from benchmarks import guidance
+        guidance.run(out=args.guidance_out, smoke=args.guidance_smoke)
     if args.section in ("all", "kernels"):
         kernel_micro()
 

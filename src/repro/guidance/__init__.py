@@ -1,0 +1,41 @@
+"""Learned search guidance: trace-trained policy/value priors for MCTS.
+
+Four layers (see ``docs/guidance.md``):
+
+1. **trace collection** — ``SearchTrace`` / ``TraceStore``
+   (``repro.guidance.trace``): finished MCTS trees are distilled into
+   (state features, per-action visit counts, subtree best cost) records
+   and persisted crash-safely, gathered opportunistically during normal
+   zoo/portfolio runs;
+2. **featurization** — ``GuidanceFeaturizer``
+   (``repro.guidance.features``): mesh- and architecture-agnostic
+   vectors built from the static analysis tables, so supervision
+   transfers across programs;
+3. **policy/value model** — ``PolicyValueModel`` / ``train_model``
+   (``repro.guidance.model``): a small pure-numpy MLP with JSON
+   round-trip and a ``python -m repro.launch.guide`` train/eval CLI;
+4. **search integration** — ``GuidanceSpec``
+   (``repro.guidance.spec``): PUCT prior-weighted selection and
+   value-bootstrap leaves behind ``MCTSConfig(guidance=...)`` /
+   ``Request(guidance=...)`` / ``zoo --guided``, default-off and
+   bit-identical to vanilla UCT under a uniform prior.
+"""
+
+from repro.guidance.evaluate import (evals_to_reach,  # noqa: F401
+                                     guided_comparison, summarize_rows)
+from repro.guidance.features import (ACTION_DIM, FEATURE_VERSION,  # noqa: F401
+                                     GuidanceFeaturizer, STATE_DIM)
+from repro.guidance.model import (MLP, PolicyValueModel,  # noqa: F401
+                                  train_model)
+from repro.guidance.spec import (BoundGuidance, GuidanceSpec,  # noqa: F401
+                                 load_guidance, uniform_guidance)
+from repro.guidance.trace import (SearchTrace, TRACE_SCHEMA,  # noqa: F401
+                                  TraceStore, extract_trace, trace_key)
+
+__all__ = [
+    "ACTION_DIM", "BoundGuidance", "FEATURE_VERSION", "GuidanceFeaturizer",
+    "GuidanceSpec", "MLP", "PolicyValueModel", "STATE_DIM", "SearchTrace",
+    "TRACE_SCHEMA", "TraceStore", "evals_to_reach", "extract_trace",
+    "guided_comparison", "load_guidance", "summarize_rows", "trace_key",
+    "train_model", "uniform_guidance",
+]

@@ -1,0 +1,134 @@
+"""Guided-vs-unguided search comparison (the transfer-eval protocol).
+
+The guidance claim is about *search efficiency*, not plan validity: a
+policy/value model trained on traces from other architectures should let
+MCTS reach the unguided best cost in fewer real cost evaluations (or a
+strictly better cost at the same evaluation budget).  This module
+implements the measurement protocol ``docs/guidance.md`` specifies and
+both ``python -m repro.launch.guide eval`` and
+``benchmarks/guidance.py`` consume:
+
+1. run **unguided** MCTS with the reference budget; note its best cost
+   and — from its eval-indexed improvement curve — the evaluation count
+   at which that best was first reached;
+2. run **guided** MCTS with the same seed, capped at the unguided run's
+   total evaluations (``MCTSConfig.max_evaluations``), so the guided
+   search can never spend more;
+3. read the guided curve for the first point at or below the unguided
+   best (``evals_to_match``) and compare costs at the shared budget.
+
+Each run gets a fresh ``IncrementalEvaluator`` over the shared cost
+model, so transposition caches never leak between arms.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.evaluator import IncrementalEvaluator
+from repro.core.mcts import MCTS, MCTSConfig
+
+__all__ = ["evals_to_reach", "guided_comparison", "summarize_rows"]
+
+
+def evals_to_reach(curve: list[tuple[int, float]], target: float,
+                   tol: float = 1e-9) -> int | None:
+    """First evaluation count at which a curve reaches ``target``.
+
+    Args:
+        curve: eval-indexed improvement curve from ``SearchResult.curve``
+            (monotone non-increasing cost).
+        target: cost to reach.
+        tol: absolute slack on the comparison.
+
+    Returns:
+        The evaluations of the first curve point with cost <= target +
+        tol, or ``None`` if the curve never reaches it.
+    """
+    for evals, cost in curve:
+        if cost <= target + tol:
+            return evals
+    return None
+
+
+def guided_comparison(cm, actions, *, guidance,
+                      base_cfg: MCTSConfig | None = None,
+                      seeds: tuple[int, ...] = (0, 1),
+                      constraints=None) -> list[dict]:
+    """Run the unguided/guided protocol over ``seeds``.
+
+    Args:
+        cm: the program's ``CostModel`` (shared, read-only).
+        actions: pruned action space.
+        guidance: ``GuidanceSpec`` for the guided arm.
+        base_cfg: search budget template; its ``seed``, ``guidance`` and
+            ``max_evaluations`` fields are overridden per arm.
+        seeds: one comparison per seed.
+        constraints: optional ``ConstraintSet`` shared by both arms.
+
+    Returns:
+        One dict per seed: costs, evaluation counts, ``evals_to_match``
+        (guided evals to reach the unguided best; ``None`` = never), the
+        ``evals_ratio`` against the unguided evals-to-best, and
+        ``better_at_budget`` (strictly lower guided cost at the shared
+        evaluation cap).
+    """
+    base_cfg = base_cfg or MCTSConfig(rounds=4, trajectories_per_round=16)
+    rows: list[dict] = []
+    for seed in seeds:
+        ev_u = IncrementalEvaluator(cm, constraints=constraints)
+        cfg_u = dataclasses.replace(base_cfg, seed=seed, guidance=None,
+                                    max_evaluations=None)
+        res_u = MCTS(ev_u, actions, cfg_u).search()
+        # when the unguided best was first reached (its last curve point)
+        unguided_best_at = res_u.curve[-1][0] if res_u.curve \
+            else res_u.evaluations
+
+        ev_g = IncrementalEvaluator(cm, constraints=constraints)
+        cfg_g = dataclasses.replace(base_cfg, seed=seed,
+                                    guidance=guidance,
+                                    max_evaluations=res_u.evaluations)
+        res_g = MCTS(ev_g, actions, cfg_g).search()
+        to_match = evals_to_reach(res_g.curve, res_u.best_cost)
+        rows.append({
+            "seed": seed,
+            "unguided_cost": round(res_u.best_cost, 6),
+            "unguided_evals": res_u.evaluations,
+            "unguided_best_at": unguided_best_at,
+            "guided_cost": round(res_g.best_cost, 6),
+            "guided_evals": res_g.evaluations,
+            "evals_to_match": to_match,
+            "evals_ratio": (None if to_match is None else
+                            round(to_match / max(unguided_best_at, 1),
+                                  4)),
+            "better_at_budget": bool(res_g.best_cost
+                                     < res_u.best_cost - 1e-9),
+        })
+    return rows
+
+
+def summarize_rows(rows: list[dict]) -> dict:
+    """Aggregate per-seed comparison rows into the acceptance summary.
+
+    Args:
+        rows: :func:`guided_comparison` output (possibly across several
+            programs — rows are treated uniformly).
+
+    Returns:
+        ``{"n", "matched", "best_evals_ratio", "mean_evals_ratio",
+        "n_better_at_budget", "accepted"}`` where ``accepted`` is the
+        issue's criterion: some row matched the unguided best within
+        0.5x its evaluations, or beat it outright at the shared budget.
+    """
+    ratios = [r["evals_ratio"] for r in rows
+              if r["evals_ratio"] is not None]
+    better = sum(r["better_at_budget"] for r in rows)
+    return {
+        "n": len(rows),
+        "matched": len(ratios),
+        "best_evals_ratio": min(ratios) if ratios else None,
+        "mean_evals_ratio": (round(sum(ratios) / len(ratios), 4)
+                             if ratios else None),
+        "n_better_at_budget": better,
+        "accepted": bool((ratios and min(ratios) <= 0.5) or better > 0),
+    }

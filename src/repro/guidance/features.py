@@ -1,0 +1,169 @@
+"""Mesh- and architecture-agnostic featurization for search guidance.
+
+The whole point of trace-trained guidance (PAPERS.md: "A Transferable
+Approach for Partitioning Machine Learning Models on Multi-Chip-Modules",
+arXiv:2112.04041) is that a policy learned on *small* zoo programs must
+transfer to *unseen, full-size* ones.  Features therefore never encode
+program identity (op ids, color ids, raw byte counts); everything is a
+**ratio against the program's own unsharded baseline** or a **fraction of
+a static table size** the analysis already computed:
+
+- **state features** come from the ``CostBreakdown`` the evaluator has
+  already cached for the state (runtime/memory/collective fractions
+  relative to the unsharded baseline, memory-budget overflow, how much of
+  the mesh/action budget is spent) — no extra dense evaluation;
+- **action features** are static per ``(program, mesh)`` and derived from
+  the NDA color summary and the conflict analysis (axis size/kind, how
+  big and how divisible the action's target dims are, how much of the
+  program the color spans, resolution-bit content).
+
+``FEATURE_VERSION`` stamps every persisted trace; changing anything about
+the layout below must bump it so ``TraceStore`` invalidates stale traces
+instead of silently mis-training (see ``repro.guidance.trace``).
+"""
+
+from __future__ import annotations
+
+import math
+
+from repro.core.actions import Action
+from repro.core.cost_model import CostBreakdown, CostModel, ShardingState
+
+__all__ = ["ACTION_DIM", "FEATURE_VERSION", "GuidanceFeaturizer",
+           "STATE_DIM"]
+
+#: bump when the feature layout changes — persisted traces carry it and
+#: are dropped on mismatch rather than silently mis-training a model
+FEATURE_VERSION = 1
+
+#: length of one state feature vector
+STATE_DIM = 10
+
+#: length of one action feature vector
+ACTION_DIM = 12
+
+_EPS = 1e-12
+
+
+def _clip01(x: float) -> float:
+    return 0.0 if x < 0.0 else (1.0 if x > 1.0 else x)
+
+
+class GuidanceFeaturizer:
+    """Turns (state, action) pairs into fixed-length transfer features.
+
+    Built once per bound search from an existing :class:`CostModel` —
+    construction only walks the NDA color summary (static tables the
+    analysis already built), and per-action vectors are memoized, so
+    featurizing inside the MCTS hot loop is a dict lookup plus a little
+    arithmetic on the state's cached breakdown.
+    """
+
+    def __init__(self, cm: CostModel) -> None:
+        """Precompute per-color static tables for ``cm``'s program/mesh.
+
+        Args:
+            cm: the cost model of the search being guided; supplies the
+                program, NDA, conflict analysis, mesh, and hardware.
+        """
+        self.cm = cm
+        self._base = cm.baseline()
+        self._n_ops = max(len(cm.prog.ops), 1)
+        self._n_axes = max(len(cm.mesh.axes), 1)
+        self._axis_index = {a: i for i, a in enumerate(cm.mesh.axes)}
+        self._axis_size = dict(zip(cm.mesh.axes, cm.mesh.sizes))
+        self._n_bits = max(cm.analysis.num_resolution_bits, 1)
+        summary = cm.nda.color_summary()
+        self._max_occ = max((len(o) for o in summary.values()),
+                            default=1) or 1
+        # color -> (occurrence count, [dim sizes of the occurrences])
+        self._color_occ: dict[int, tuple[int, list[int]]] = {}
+        types = cm.prog.types
+        for color, occ in summary.items():
+            sizes = [types[vid].shape[d] for vid, d in occ]
+            self._color_occ[color] = (len(occ), sizes)
+        self._action_cache: dict[Action, list[float]] = {}
+
+    # -- state ---------------------------------------------------------------
+
+    def state_features(self, state: ShardingState,
+                       bd: CostBreakdown) -> list[float]:
+        """Featurize one sharding state from its cached breakdown.
+
+        Everything is normalized by the program's own unsharded baseline
+        (or a static table size), so vectors are comparable across
+        programs of wildly different absolute scale.
+
+        Args:
+            state: the canonical sharding state.
+            bd: its ``CostBreakdown`` (from the evaluator's cache — no
+                dense re-evaluation happens here).
+
+        Returns:
+            A list of ``STATE_DIM`` floats, each roughly in ``[0, 1]``.
+        """
+        base = self._base
+        rt = bd.runtime / max(base.runtime, _EPS)
+        run = max(bd.runtime, _EPS)
+        hbm = self.cm.hw.hbm_per_chip
+        n_assign = sum(len(axes) for _, axes in state.color_axes)
+        return [
+            _clip01(rt / 4.0),
+            _clip01(bd.compute_time / run),
+            _clip01(bd.collective_time / run),
+            _clip01(bd.memory_time / max(base.memory_time, _EPS) / 2.0),
+            _clip01(bd.peak_bytes / max(base.peak_bytes, _EPS)),
+            _clip01((bd.peak_bytes - hbm) / max(base.peak_bytes, _EPS)),
+            1.0 if bd.peak_bytes <= hbm else 0.0,
+            _clip01(n_assign / 30.0),
+            _clip01(len(state.used_axes) / self._n_axes),
+            _clip01(len(state.bits) / self._n_bits),
+        ]
+
+    # -- actions -------------------------------------------------------------
+
+    def action_features(self, action: Action) -> list[float]:
+        """Featurize one action (memoized — static per program/mesh).
+
+        Args:
+            action: a sharding action from the pruned action space (the
+                explicit stop action gets its own indicator vector).
+
+        Returns:
+            A list of ``ACTION_DIM`` floats, each roughly in ``[0, 1]``.
+        """
+        feat = self._action_cache.get(action)
+        if feat is None:
+            feat = self._action_features(action)
+            self._action_cache[action] = feat
+        return feat
+
+    def _action_features(self, action: Action) -> list[float]:
+        if action.is_stop:
+            return [1.0] + [0.0] * (ACTION_DIM - 1)
+        size = self._axis_size.get(action.axis, 1)
+        occ_n, dim_sizes = self._color_occ.get(action.color, (0, []))
+        n = max(len(dim_sizes), 1)
+        div = sum(1 for d in dim_sizes if d >= size and d % size == 0)
+        headroom = sum(1 for d in dim_sizes
+                       if d >= size * size and d % (size * size) == 0)
+        mean_log_dim = sum(math.log2(max(d, 1))
+                           for d in dim_sizes) / n
+        bits = action.bit_choices
+        mean_bit = (sum(b for _, b in bits) / len(bits)) if bits else 0.0
+        return [
+            0.0,                                            # is_stop
+            _clip01(math.log2(max(size, 1)) / 6.0),
+            1.0 if action.axis in self.cm.mesh.dcn_axes else 0.0,
+            _clip01(self._axis_index.get(action.axis, 0)
+                    / max(self._n_axes - 1, 1)),
+            _clip01(occ_n / self._max_occ),
+            _clip01(math.log1p(occ_n) / math.log1p(self._max_occ)),
+            _clip01(mean_log_dim / 20.0),
+            _clip01(div / n),
+            _clip01(headroom / n),
+            _clip01(len(bits) / 2.0),
+            _clip01(mean_bit),
+            _clip01(self.cm.ops_touching_color(action.color)
+                    / self._n_ops),
+        ]

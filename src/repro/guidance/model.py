@@ -1,0 +1,421 @@
+"""Policy/value model over guidance features: a small pure-numpy MLP.
+
+Two heads, AlphaZero-style but sized for CPU training in seconds:
+
+- the **policy** head scores one ``concat(state, action)`` feature row
+  per candidate action; a softmax over the candidate set gives priors.
+  Training minimizes cross-entropy against the MCTS **visit
+  distribution** of each recorded tree node (visits are the search's own
+  estimate of action quality — the standard distillation target).
+- the **value** head regresses the node's **subtree best cost** — the
+  cheapest real cost the search proved reachable below the node.  At
+  search time it replaces random playouts as the leaf estimate
+  (``repro.guidance.spec``), which is where the eval-budget savings come
+  from: a playout costs several real evaluations, a value lookup costs
+  none.
+
+Everything is deterministic given the seed: seeded init, full-batch
+Adam, no dropout.  ``to_json``/``from_json`` round-trip the weights
+exactly (lists of floats), so a trained model is a portable ~100 KB
+artifact that ``zoo --guided`` and CI can load.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+
+import numpy as np
+
+from repro.guidance.features import ACTION_DIM, FEATURE_VERSION, STATE_DIM
+
+__all__ = ["MLP", "PolicyValueModel", "train_model"]
+
+
+class MLP:
+    """Minimal fully-connected ReLU network with Adam, in numpy.
+
+    Deliberately tiny and dependency-free: guidance must stay loadable
+    and trainable in CI smoke jobs and inside the search process without
+    touching an accelerator.
+    """
+
+    def __init__(self, sizes: tuple[int, ...], seed: int = 0, *,
+                 zero: bool = False) -> None:
+        """He-initialized network of the given layer sizes.
+
+        Args:
+            sizes: layer widths, e.g. ``(22, 32, 32, 1)``.
+            seed: init RNG seed.
+            zero: start all weights/biases at exactly zero — the output
+                is exactly ``0.0`` for every input, which is what the
+                bit-identity uniform-prior property tests build on.
+        """
+        rng = np.random.default_rng(seed)
+        self.sizes = tuple(int(s) for s in sizes)
+        self.W: list[np.ndarray] = []
+        self.b: list[np.ndarray] = []
+        for fan_in, fan_out in zip(self.sizes[:-1], self.sizes[1:]):
+            if zero:
+                w = np.zeros((fan_in, fan_out))
+            else:
+                w = rng.normal(0.0, math.sqrt(2.0 / fan_in),
+                               (fan_in, fan_out))
+            self.W.append(w)
+            self.b.append(np.zeros(fan_out))
+        self._adam: list | None = None
+
+    def forward(self, X: np.ndarray) -> np.ndarray:
+        """Network output for a batch.
+
+        Args:
+            X: inputs, shape ``(n, sizes[0])``.
+
+        Returns:
+            Outputs, shape ``(n,)`` (the final width-1 layer squeezed).
+        """
+        h = np.asarray(X, dtype=np.float64)
+        for i in range(len(self.W) - 1):
+            h = np.maximum(h @ self.W[i] + self.b[i], 0.0)
+        out = h @ self.W[-1] + self.b[-1]
+        return out[:, 0] if out.shape[-1] == 1 else out
+
+    def _forward_cache(self, X):
+        acts = [np.asarray(X, dtype=np.float64)]
+        for i in range(len(self.W) - 1):
+            acts.append(np.maximum(acts[-1] @ self.W[i] + self.b[i], 0.0))
+        out = acts[-1] @ self.W[-1] + self.b[-1]
+        return out[:, 0], acts
+
+    def _backward(self, acts, dout):
+        gW = [None] * len(self.W)
+        gb = [None] * len(self.b)
+        d = dout[:, None]
+        for i in range(len(self.W) - 1, -1, -1):
+            gW[i] = acts[i].T @ d
+            gb[i] = d.sum(axis=0)
+            if i > 0:
+                d = (d @ self.W[i].T) * (acts[i] > 0.0)
+        return gW, gb
+
+    def adam_step(self, gW, gb, *, lr: float, t: int,
+                  beta1: float = 0.9, beta2: float = 0.999,
+                  eps: float = 1e-8) -> None:
+        """One Adam update from explicit gradients.
+
+        Args:
+            gW: per-layer weight gradients.
+            gb: per-layer bias gradients.
+            lr: learning rate.
+            t: 1-based step counter (bias correction).
+            beta1: first-moment decay.
+            beta2: second-moment decay.
+            eps: denominator stabilizer.
+        """
+        if self._adam is None:
+            self._adam = [[np.zeros_like(w), np.zeros_like(w),
+                           np.zeros_like(b), np.zeros_like(b)]
+                          for w, b in zip(self.W, self.b)]
+        for i, (gw, gbi) in enumerate(zip(gW, gb)):
+            mW, vW, mB, vB = self._adam[i]
+            mW += (1 - beta1) * (gw - mW)
+            vW += (1 - beta2) * (gw * gw - vW)
+            mB += (1 - beta1) * (gbi - mB)
+            vB += (1 - beta2) * (gbi * gbi - vB)
+            c1 = 1 - beta1 ** t
+            c2 = 1 - beta2 ** t
+            self.W[i] -= lr * (mW / c1) / (np.sqrt(vW / c2) + eps)
+            self.b[i] -= lr * (mB / c1) / (np.sqrt(vB / c2) + eps)
+
+    def to_json(self) -> dict:
+        """JSON-serializable weights (inverse of :meth:`from_json`)."""
+        return {"sizes": list(self.sizes),
+                "W": [w.tolist() for w in self.W],
+                "b": [b.tolist() for b in self.b]}
+
+    @classmethod
+    def from_json(cls, d: dict) -> "MLP":
+        """Rebuild a network from :meth:`to_json` output.
+
+        Args:
+            d: the dict to rebuild from.
+
+        Returns:
+            The reconstructed ``MLP`` (weights bit-equal to the saved
+            float64 values).
+        """
+        net = cls(tuple(d["sizes"]), zero=True)
+        net.W = [np.asarray(w, dtype=np.float64) for w in d["W"]]
+        net.b = [np.asarray(b, dtype=np.float64) for b in d["b"]]
+        return net
+
+
+class PolicyValueModel:
+    """Trained search guidance: action priors + leaf value estimates."""
+
+    def __init__(self, policy: MLP | None = None, value: MLP | None = None,
+                 *, hidden: tuple[int, ...] = (32, 32), seed: int = 0,
+                 zero: bool = False, metadata: dict | None = None) -> None:
+        """Create a model (fresh heads unless given).
+
+        Args:
+            policy: policy head over ``STATE_DIM + ACTION_DIM`` inputs.
+            value: value head over ``STATE_DIM`` inputs.
+            hidden: hidden widths for freshly created heads.
+            seed: init seed for freshly created heads.
+            zero: zero-init both heads (exactly uniform priors, zero
+                values — the provably-non-invasive configuration).
+            metadata: free-form training provenance stored alongside.
+        """
+        self.feature_version = FEATURE_VERSION
+        self.policy = policy if policy is not None else MLP(
+            (STATE_DIM + ACTION_DIM, *hidden, 1), seed=seed, zero=zero)
+        self.value = value if value is not None else MLP(
+            (STATE_DIM, *hidden, 1), seed=seed + 1, zero=zero)
+        self.metadata = dict(metadata or {})
+
+    @classmethod
+    def uniform(cls) -> "PolicyValueModel":
+        """A zero-weight model: exactly uniform priors, zero values.
+
+        ``softmax(0, ..., 0)`` computes to exactly ``1/n`` per action, so
+        PUCT's prior factor is exactly ``1.0`` and guided selection is
+        bit-identical to vanilla UCT (the property the tests pin).
+
+        Returns:
+            The zero model.
+        """
+        return cls(zero=True, metadata={"uniform": True})
+
+    def predict_priors(self, state_feat: list[float],
+                       action_feats: list[list[float]]) -> list[float]:
+        """Softmax priors over one node's candidate actions.
+
+        Args:
+            state_feat: the node's state feature vector.
+            action_feats: one action feature vector per candidate.
+
+        Returns:
+            Priors summing to 1, candidate order preserved.
+        """
+        n = len(action_feats)
+        if n == 0:
+            return []
+        sf = np.asarray(state_feat, dtype=np.float64)
+        X = np.concatenate(
+            [np.tile(sf, (n, 1)),
+             np.asarray(action_feats, dtype=np.float64)], axis=1)
+        logits = self.policy.forward(X)
+        z = logits - logits.max()
+        e = np.exp(z)
+        p = e / e.sum()
+        return [float(x) for x in p]
+
+    def predict_value(self, state_feat: list[float]) -> float:
+        """Predicted subtree-best cost below a state.
+
+        Args:
+            state_feat: the state feature vector.
+
+        Returns:
+            The (non-negative) predicted cost.
+        """
+        v = float(self.value.forward(
+            np.asarray(state_feat, dtype=np.float64)[None, :])[0])
+        return max(v, 0.0)
+
+    def to_json(self) -> dict:
+        """JSON-serializable model (inverse of :meth:`from_json`)."""
+        return {"feature_version": self.feature_version,
+                "policy": self.policy.to_json(),
+                "value": self.value.to_json(),
+                "metadata": self.metadata}
+
+    @classmethod
+    def from_json(cls, d: dict) -> "PolicyValueModel":
+        """Rebuild a model from :meth:`to_json` output.
+
+        Args:
+            d: the dict to rebuild from.
+
+        Returns:
+            The reconstructed model.
+
+        Raises:
+            ValueError: when the saved ``feature_version`` mismatches the
+                current featurizer (a stale model must not silently steer
+                searches with garbage features).
+        """
+        fv = d.get("feature_version")
+        if fv != FEATURE_VERSION:
+            raise ValueError(
+                f"guidance model has feature_version {fv}, current "
+                f"featurizer is {FEATURE_VERSION} — retrain "
+                f"(python -m repro.launch.guide train)")
+        return cls(policy=MLP.from_json(d["policy"]),
+                   value=MLP.from_json(d["value"]),
+                   metadata=d.get("metadata", {}))
+
+    def save(self, path) -> None:
+        """Write the model to ``path`` as JSON.
+
+        Args:
+            path: destination file path.
+        """
+        import pathlib
+        pathlib.Path(path).write_text(json.dumps(self.to_json()))
+
+    @classmethod
+    def load(cls, path) -> "PolicyValueModel":
+        """Load a model saved by :meth:`save`.
+
+        Args:
+            path: the JSON file to load.
+
+        Returns:
+            The loaded model.
+        """
+        import pathlib
+        return cls.from_json(json.loads(pathlib.Path(path).read_text()))
+
+
+def _policy_dataset(traces):
+    """Flatten traces into (X rows, group boundaries, visit targets)."""
+    rows, bounds, targets = [], [0], []
+    for tr in traces:
+        for node in tr.nodes:
+            acts = node["actions"]
+            if len(acts) < 2:
+                continue
+            total = sum(a["visits"] for a in acts)
+            if total <= 0:
+                continue
+            for a in acts:
+                rows.append(node["state"] + a["feat"])
+                targets.append(a["visits"] / total)
+            bounds.append(len(rows))
+    if not rows:
+        return None
+    return (np.asarray(rows, dtype=np.float64),
+            np.asarray(bounds, dtype=np.int64),
+            np.asarray(targets, dtype=np.float64))
+
+
+def _value_dataset(traces, clip: float = 4.0):
+    Xs, ys = [], []
+    for tr in traces:
+        for node in tr.nodes:
+            Xs.append(node["state"])
+            ys.append(min(node["subtree_best"], clip))
+    if not Xs:
+        return None
+    return (np.asarray(Xs, dtype=np.float64),
+            np.asarray(ys, dtype=np.float64))
+
+
+def _segment_softmax(logits, bounds):
+    p = np.empty_like(logits)
+    for i in range(len(bounds) - 1):
+        lo, hi = bounds[i], bounds[i + 1]
+        z = logits[lo:hi] - logits[lo:hi].max()
+        e = np.exp(z)
+        p[lo:hi] = e / e.sum()
+    return p
+
+
+def _policy_metrics(model, data):
+    X, bounds, t = data
+    logits = model.policy.forward(X)
+    p = _segment_softmax(logits, bounds)
+    top1 = 0
+    ce = 0.0
+    n = len(bounds) - 1
+    for i in range(n):
+        lo, hi = bounds[i], bounds[i + 1]
+        top1 += int(np.argmax(p[lo:hi]) == np.argmax(t[lo:hi]))
+        ce -= float(t[lo:hi] @ np.log(p[lo:hi] + 1e-12))
+    return {"groups": n, "top1": top1 / max(n, 1),
+            "cross_entropy": ce / max(n, 1)}
+
+
+def _value_metrics(model, data):
+    X, y = data
+    pred = model.value.forward(X)
+    return {"n": len(y),
+            "mae": float(np.abs(pred - y).mean()),
+            "mean_target": float(y.mean())}
+
+
+def train_model(traces, *, holdout_tags: tuple[str, ...] = (),
+                hidden: tuple[int, ...] = (32, 32), epochs: int = 300,
+                lr: float = 5e-3, seed: int = 0
+                ) -> tuple[PolicyValueModel, dict]:
+    """Fit a policy/value model on stored traces.
+
+    Full-batch Adam on both heads: cross-entropy of the segment softmax
+    against visit distributions for the policy, MSE against (clipped)
+    subtree best cost for the value.  Traces whose ``tag`` is in
+    ``holdout_tags`` are excluded from fitting and reported separately —
+    the held-out-architecture transfer protocol from the issue.
+
+    Args:
+        traces: ``SearchTrace`` list (``TraceStore.load_all()``).
+        holdout_tags: architecture tags to hold out of training.
+        hidden: hidden layer widths for both heads.
+        epochs: full-batch Adam steps.
+        lr: learning rate.
+        seed: init seed.
+
+    Returns:
+        ``(model, metrics)`` — metrics carry train/holdout policy top-1
+        accuracy + cross-entropy and value MAE.
+
+    Raises:
+        ValueError: when no usable training rows exist.
+    """
+    train = [t for t in traces if t.tag not in holdout_tags]
+    held = [t for t in traces if t.tag in holdout_tags]
+    pol = _policy_dataset(train)
+    val = _value_dataset(train)
+    if pol is None or val is None:
+        raise ValueError(
+            f"no usable training data in {len(train)} traces "
+            f"(need nodes with >= 2 expanded actions)")
+    model = PolicyValueModel(hidden=hidden, seed=seed)
+
+    X, bounds, t = pol
+    n_groups = len(bounds) - 1
+    Xv, yv = val
+    for step in range(1, epochs + 1):
+        logits, acts = model.policy._forward_cache(X)
+        p = _segment_softmax(logits, bounds)
+        dlogits = (p - t) / n_groups
+        gW, gb = model.policy._backward(acts, dlogits)
+        model.policy.adam_step(gW, gb, lr=lr, t=step)
+
+        pred, vacts = model.value._forward_cache(Xv)
+        dv = 2.0 * (pred - yv) / len(yv)
+        gW, gb = model.value._backward(vacts, dv)
+        model.value.adam_step(gW, gb, lr=lr, t=step)
+
+    metrics = {
+        "n_traces": len(train),
+        "n_holdout_traces": len(held),
+        "train_tags": sorted({t_.tag for t_ in train}),
+        "holdout_tags": sorted({t_.tag for t_ in held}),
+        "epochs": epochs,
+        "policy_train": _policy_metrics(model, pol),
+        "value_train": _value_metrics(model, val),
+    }
+    if held:
+        hp = _policy_dataset(held)
+        hv = _value_dataset(held)
+        if hp is not None:
+            metrics["policy_holdout"] = _policy_metrics(model, hp)
+        if hv is not None:
+            metrics["value_holdout"] = _value_metrics(model, hv)
+    model.metadata = {"trained_on": metrics["train_tags"],
+                      "holdout": metrics["holdout_tags"],
+                      "epochs": epochs, "hidden": list(hidden),
+                      "seed": seed}
+    return model, metrics

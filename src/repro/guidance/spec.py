@@ -1,0 +1,221 @@
+"""Guidance configuration and its per-search binding.
+
+:class:`GuidanceSpec` is the single user-facing knob: attach it to
+``MCTSConfig(guidance=...)``, ``PortfolioConfig(guidance=...)``, or
+``Request(guidance=...)`` and the search gains any combination of
+
+- **PUCT priors** (``model`` with ``prior_scale > 0``): the learned
+  policy reweights UCT's exploration term, orders untried-action
+  expansion best-first, and restricts random playouts to the policy's
+  plausible actions (see :meth:`BoundGuidance.playout_actions`);
+- **value bootstrap** (``model`` with ``value_weight > 0``): fresh
+  leaves take the value head's subtree-best estimate instead of running
+  a random playout — saving the several real evaluations a playout
+  costs, which is where guided search's eval-budget advantage comes from
+  (best-cost bookkeeping still uses only real costs, so results stay
+  sound);
+- **trace collection** (``collector``): the finished tree is distilled
+  into a ``SearchTrace`` and persisted.  A spec with *only* a collector
+  leaves the search itself completely untouched — collection is a pure
+  side effect of searches that were running anyway.
+
+The contract the property tests pin: ``GuidanceSpec`` with a uniform
+(zero-weight) model and ``value_weight=0`` is **bit-identical** to no
+guidance at all — same visited states, same visit counts, same best
+plan, same RNG stream.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from repro.guidance.features import GuidanceFeaturizer
+from repro.guidance.model import PolicyValueModel
+from repro.guidance.trace import TraceStore, extract_trace
+
+__all__ = ["BoundGuidance", "GuidanceSpec", "load_guidance",
+           "uniform_guidance"]
+
+
+@dataclasses.dataclass(eq=False)
+class GuidanceSpec:
+    """Learned-guidance configuration attached to a search.
+
+    Compared by identity (``eq=False``): a spec carries live objects (a
+    model, a trace store) and must stay hashable inside frozen configs
+    and ``Request``s.
+
+    Attributes:
+        model: trained :class:`repro.guidance.model.PolicyValueModel`
+            (or ``None`` for collection-only specs).
+        collector: :class:`repro.guidance.trace.TraceStore` (or any
+            object with ``put(trace)``) receiving a ``SearchTrace`` per
+            finished search; ``None`` disables collection.
+        prior_scale: strength of the PUCT prior reweighting — the
+            exploration term is scaled by ``1 + prior_scale * n * (p -
+            1/n)`` (clamped positive), so a uniform prior leaves UCT
+            exactly unchanged and ``0.0`` disables priors entirely.
+        value_weight: blend weight of the value bootstrap at fresh
+            leaves (``0.0`` disables it and random playouts run
+            unchanged); the backed-up reward uses ``(1 - w) * real_leaf_
+            cost + w * predicted_subtree_best``.
+        tag: origin label stamped on collected traces (the zoo sets the
+            architecture id).
+        min_visits: tree nodes visited fewer times are dropped from
+            collected traces.
+    """
+
+    model: PolicyValueModel | None = None
+    collector: TraceStore | None = None
+    prior_scale: float = 1.5
+    value_weight: float = 0.0
+    tag: str = ""
+    min_visits: int = 1
+
+    def bind(self, evaluator, actions) -> "BoundGuidance":
+        """Bind the spec to one concrete search.
+
+        Args:
+            evaluator: the search's ``IncrementalEvaluator``.
+            actions: the pruned action space (reserved for future
+                featurizer precomputation; the featurizer currently
+                derives everything from the cost model).
+
+        Returns:
+            A :class:`BoundGuidance` for the search to consult.
+        """
+        del actions
+        return BoundGuidance(self, evaluator)
+
+
+def uniform_guidance(collector: TraceStore | None = None,
+                     tag: str = "") -> GuidanceSpec:
+    """A provably non-invasive spec: uniform priors, no value bootstrap.
+
+    Useful for trace collection and as the bit-identity reference in
+    tests — searches behave exactly as with ``guidance=None``.
+
+    Args:
+        collector: optional trace sink.
+        tag: origin label for collected traces.
+
+    Returns:
+        The spec.
+    """
+    return GuidanceSpec(model=PolicyValueModel.uniform(),
+                        collector=collector, value_weight=0.0, tag=tag)
+
+
+class BoundGuidance:
+    """One search's view of a :class:`GuidanceSpec`.
+
+    Owns the featurizer (built from the search's cost model) and exposes
+    exactly what the MCTS hot loop needs: priors per node, a leaf value
+    estimate, and end-of-search trace emission.
+    """
+
+    def __init__(self, spec: GuidanceSpec, evaluator) -> None:
+        """Bind ``spec`` to a search running over ``evaluator``.
+
+        Args:
+            spec: the guidance configuration.
+            evaluator: the search's ``IncrementalEvaluator``.
+        """
+        self.spec = spec
+        self.ev = evaluator
+        self.featurizer = GuidanceFeaturizer(evaluator.cm)
+        self.prior_scale = float(spec.prior_scale)
+        self.value_weight = float(spec.value_weight)
+        #: whether the search should compute and apply priors
+        self.has_policy = spec.model is not None and self.prior_scale != 0.0
+        #: whether fresh leaves should take value bootstraps
+        self.has_value = spec.model is not None and self.value_weight > 0.0
+
+    def playout_actions(self, state, actions) -> list:
+        """Policy-directed playout restriction (bit-identity-safe).
+
+        Keeps the actions whose prior is within half of the best prior,
+        steering random playouts toward states the policy likes.  Under
+        an exactly-uniform prior every action ties the max, the full
+        list comes back unchanged, and — because the caller draws from
+        the same RNG either way — the playout is bit-identical to an
+        unguided one.
+
+        Args:
+            state: current playout state (already costed).
+            actions: valid actions at ``state`` (non-empty).
+
+        Returns:
+            The kept actions, original order preserved.
+        """
+        pri = self.priors(state, actions)
+        cut = 0.5 * max(pri)
+        return [a for a, p in zip(actions, pri) if p >= cut]
+
+    def priors(self, state, actions) -> list[float]:
+        """Policy priors over ``actions`` at ``state`` (sum to 1).
+
+        Args:
+            state: the node's canonical sharding state (already costed —
+                its breakdown is a cache hit).
+            actions: candidate actions, order preserved in the result.
+
+        Returns:
+            One prior per action.
+        """
+        sf = self.featurizer.state_features(state, self.ev.evaluate(state))
+        af = [self.featurizer.action_features(a) for a in actions]
+        return self.spec.model.predict_priors(sf, af)
+
+    def leaf_value(self, state) -> float:
+        """Predicted subtree-best cost below a fresh leaf.
+
+        Args:
+            state: the leaf's canonical sharding state.
+
+        Returns:
+            The value head's (non-negative) cost estimate.
+        """
+        sf = self.featurizer.state_features(state, self.ev.evaluate(state))
+        return self.spec.model.predict_value(sf)
+
+    def finish(self, nodes: dict, root, *, seed: int,
+               best_cost: float) -> None:
+        """Emit a trace for a finished search (no-op without collector).
+
+        Args:
+            nodes: the MCTS ``{state: node}`` table.
+            root: the search root state.
+            seed: the search's RNG seed.
+            best_cost: the search's best cost.
+        """
+        if self.spec.collector is None:
+            return
+        cm = self.ev.cm
+        try:
+            from repro.core.ir import program_fingerprint
+            fp = program_fingerprint(cm.prog)
+        except Exception:   # noqa: BLE001 — a trace without fp still trains
+            fp = ""
+        trace = extract_trace(
+            nodes, root, self.ev, self.featurizer,
+            tag=self.spec.tag, fingerprint=fp, mesh=cm.mesh.as_dict(),
+            backend="mcts", seed=seed, best_cost=best_cost,
+            min_visits=self.spec.min_visits)
+        self.spec.collector.put(trace)
+
+
+def load_guidance(path: str, **kwargs: Any) -> GuidanceSpec:
+    """Load a trained model file into a ready-to-attach spec.
+
+    Args:
+        path: JSON model file written by ``PolicyValueModel.save`` /
+            ``python -m repro.launch.guide train``.
+        **kwargs: forwarded to :class:`GuidanceSpec` (``prior_scale``,
+            ``value_weight``, ``collector``, ``tag``, ...).
+
+    Returns:
+        The spec wrapping the loaded model.
+    """
+    return GuidanceSpec(model=PolicyValueModel.load(path), **kwargs)

@@ -1,0 +1,371 @@
+"""Search traces: persistent, reusable records of what MCTS explored.
+
+A :class:`SearchTrace` distills one finished MCTS search into per-node
+records of ``(state features, per-action features, visit counts, subtree
+best cost)`` plus the terminal plan's cost — exactly the supervision the
+policy/value model (``repro.guidance.model``) trains on.  Traces are
+gathered **opportunistically**: any zoo/portfolio run with a collector
+attached (``zoo --collect-traces``, ``GuidanceSpec(collector=...)``)
+emits them as a side effect of searches it was doing anyway, at zero
+extra search cost.
+
+:class:`TraceStore` persists traces as one JSON file per
+(program fingerprint, tag, mesh, backend, seed) key with the same
+crash-safety idiom as ``repro.ckpt.plan_store.PlanStore``: per-process
+temp file + atomic ``os.replace`` commit, stale-temp sweep on open,
+corrupt entries skipped on read.  Every trace carries ``TRACE_SCHEMA``
+and the featurizer's ``FEATURE_VERSION``; :meth:`TraceStore.load_all`
+drops mismatching traces so a featurizer change invalidates stale data
+instead of silently mis-training.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import pathlib
+import tempfile
+import time
+
+from repro.guidance.features import FEATURE_VERSION
+
+__all__ = ["SearchTrace", "TRACE_SCHEMA", "TraceStore", "extract_trace",
+           "trace_key"]
+
+#: bump on incompatible SearchTrace layout changes
+TRACE_SCHEMA = 1
+
+
+@dataclasses.dataclass
+class SearchTrace:
+    """One search's worth of guidance supervision.
+
+    Attributes:
+        tag: free-form origin label (the zoo uses the architecture id;
+            held-out-architecture training splits key on it).
+        fingerprint: deterministic program fingerprint
+            (``repro.core.ir.program_fingerprint``), or ``""`` when the
+            emitter could not compute one.
+        mesh: ``MeshSpec.as_dict()`` of the searched mesh.
+        backend: search backend that produced the tree (``"mcts"``).
+        seed: the search's RNG seed.
+        root_cost: paper cost of the search root (usually 1.0 + memory
+            penalty for the unsharded state).
+        best_cost: best paper cost the search found.
+        nodes: per-tree-node records ``{"state": [STATE_DIM floats],
+            "visits": int, "cost": float, "subtree_best": float,
+            "actions": [{"feat": [ACTION_DIM floats], "visits": int,
+            "subtree_best": float}, ...]}``; action rows are the node's
+            expanded children (plus a stop row carrying the residual
+            visit mass), and ``subtree_best`` is the cheapest *real*
+            cost anywhere below — the value-model regression target.
+        schema: trace layout version (``TRACE_SCHEMA``).
+        feature_version: featurizer layout version the vectors were
+            produced under (``repro.guidance.features.FEATURE_VERSION``).
+        created: unix timestamp of emission.
+    """
+
+    tag: str
+    fingerprint: str
+    mesh: dict
+    backend: str
+    seed: int
+    root_cost: float
+    best_cost: float
+    nodes: list[dict]
+    schema: int = TRACE_SCHEMA
+    feature_version: int = FEATURE_VERSION
+    created: float = 0.0
+
+    def as_dict(self) -> dict:
+        """JSON-serializable dict (inverse of :meth:`from_dict`)."""
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "SearchTrace":
+        """Rebuild a trace from :meth:`as_dict` output.
+
+        Args:
+            d: the dict to rebuild from (unknown keys are ignored).
+
+        Returns:
+            The reconstructed ``SearchTrace``.
+        """
+        names = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in names})
+
+
+def trace_key(trace: SearchTrace) -> str:
+    """Deterministic store key for one trace.
+
+    One key per (schema, fingerprint, tag, mesh, backend, seed): re-running
+    the same search overwrites its own trace instead of accumulating
+    duplicates, while different seeds/meshes/programs key apart.
+
+    Args:
+        trace: the trace to key.
+
+    Returns:
+        A 64-char hex SHA-256 key.
+    """
+    payload = {
+        "schema": trace.schema,
+        "prog": trace.fingerprint,
+        "tag": trace.tag,
+        "mesh": trace.mesh,
+        "backend": trace.backend,
+        "seed": trace.seed,
+    }
+    blob = json.dumps(payload, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+class TraceStore:
+    """Directory-backed, crash-safe store of :class:`SearchTrace`s.
+
+    Same atomic-write discipline as ``repro.ckpt.plan_store.PlanStore``:
+    writers commit via per-process temp file + ``os.replace``, so
+    concurrent zoo/portfolio members can emit traces into one directory
+    without tearing each other's entries, and a killed writer leaves at
+    worst a stale ``*.tmp`` that the next open sweeps away.
+    """
+
+    #: temp files older than this are crash leftovers, removed on open
+    STALE_TMP_SECONDS = 3600.0
+
+    def __init__(self, directory: str | os.PathLike, *,
+                 stale_tmp_seconds: float | None = None) -> None:
+        """Open (or lazily create) a store rooted at ``directory``.
+
+        Args:
+            directory: store root; created on first write.
+            stale_tmp_seconds: age threshold for crash-leftover temp
+                cleanup on open (default ``STALE_TMP_SECONDS``).
+        """
+        self.directory = pathlib.Path(directory)
+        self.stale_tmp_seconds = (self.STALE_TMP_SECONDS
+                                  if stale_tmp_seconds is None
+                                  else stale_tmp_seconds)
+        self._cleanup_stale_tmps()
+
+    def _cleanup_stale_tmps(self) -> int:
+        """Remove crash-leftover ``*.tmp`` files older than the threshold.
+
+        Returns:
+            How many stale temp files were removed.
+        """
+        if not self.directory.is_dir():
+            return 0
+        cutoff = time.time() - self.stale_tmp_seconds
+        n = 0
+        for p in self.directory.glob("*.tmp"):
+            try:
+                if p.stat().st_mtime <= cutoff:
+                    p.unlink()
+                    n += 1
+            except OSError:
+                pass            # racing another cleanup/commit is fine
+        return n
+
+    def _path(self, key: str) -> pathlib.Path:
+        return self.directory / f"{key}.json"
+
+    def put(self, trace: SearchTrace) -> pathlib.Path:
+        """Persist one trace atomically.
+
+        Args:
+            trace: the trace to store; ``created`` is stamped here when
+                unset.
+
+        Returns:
+            The path written.
+        """
+        if not trace.created:
+            trace.created = time.time()
+        self.directory.mkdir(parents=True, exist_ok=True)
+        path = self._path(trace_key(trace))
+        fd, tmp = tempfile.mkstemp(dir=self.directory,
+                                   prefix=f"put-{os.getpid()}-",
+                                   suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(trace.as_dict(), f)
+            os.replace(tmp, path)              # atomic commit
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+        return path
+
+    def load_all(self, *, feature_version: int | None = FEATURE_VERSION,
+                 tags: tuple[str, ...] | None = None) -> list[SearchTrace]:
+        """Load every readable, version-compatible trace.
+
+        Corrupt/torn entries are skipped (a reader never crashes on a
+        half-written or damaged file), as are traces whose ``schema`` or
+        ``feature_version`` mismatch — stale supervision is invalidated,
+        not silently trained on.
+
+        Args:
+            feature_version: required featurizer version (``None``
+                disables the check; default: the current version).
+            tags: restrict to these ``trace.tag`` values when given.
+
+        Returns:
+            Traces sorted by ``(tag, seed, fingerprint)`` for
+            deterministic training-set order.
+        """
+        out: list[SearchTrace] = []
+        if not self.directory.is_dir():
+            return out
+        for p in sorted(self.directory.glob("*.json")):
+            try:
+                d = json.loads(p.read_text())
+                trace = SearchTrace.from_dict(d)
+            except Exception:   # noqa: BLE001 — torn/corrupt entry
+                continue
+            if trace.schema != TRACE_SCHEMA:
+                continue
+            if feature_version is not None and \
+                    trace.feature_version != feature_version:
+                continue
+            if tags is not None and trace.tag not in tags:
+                continue
+            out.append(trace)
+        out.sort(key=lambda t: (t.tag, t.seed, t.fingerprint))
+        return out
+
+    def __len__(self) -> int:
+        """Number of committed entries in the store directory."""
+        if not self.directory.exists():
+            return 0
+        return sum(1 for _ in self.directory.glob("*.json"))
+
+    def clear(self) -> int:
+        """Delete every entry.
+
+        Returns:
+            How many entries were removed.
+        """
+        n = 0
+        if self.directory.exists():
+            for p in self.directory.glob("*.json"):
+                p.unlink()
+                n += 1
+        return n
+
+
+# -- MCTS-tree extraction -----------------------------------------------------
+
+def extract_trace(nodes: dict, root, evaluator, featurizer, *,
+                  tag: str = "", fingerprint: str = "",
+                  mesh: dict | None = None, backend: str = "mcts",
+                  seed: int = 0, best_cost: float = 0.0,
+                  min_visits: int = 1, max_nodes: int = 512
+                  ) -> SearchTrace:
+    """Distill a finished MCTS tree into a :class:`SearchTrace`.
+
+    Subtree best costs are computed by a memoized depth-first walk over
+    the child graph (a DAG: actions only ever add axes/bits, so states
+    grow monotonically and cannot cycle) using **real** cached costs from
+    the evaluator — the value model regresses toward what the search
+    actually proved reachable, never toward its own predictions.  Policy
+    targets are the children's visit counts, plus a stop row carrying the
+    node's residual visit mass (trajectories that ended at the node).
+
+    Args:
+        nodes: the MCTS ``{state: node}`` table; nodes expose ``visits``
+            and ``children`` (action → child state).
+        root: the search root state.
+        evaluator: the search's ``IncrementalEvaluator`` (costs are cache
+            hits — extraction does not re-run the cost model).
+        featurizer: a ``GuidanceFeaturizer`` over the search's cost model.
+        tag: origin label (architecture id).
+        fingerprint: program fingerprint (may be ``""``).
+        mesh: ``MeshSpec.as_dict()`` of the searched mesh.
+        backend: emitting backend name.
+        seed: the search's RNG seed.
+        best_cost: the search's best cost (recorded on the trace).
+        min_visits: drop nodes visited fewer times (noise suppression).
+        max_nodes: keep only the most-visited records beyond this count
+            (bounds trace size on long searches).
+
+    Returns:
+        The extracted ``SearchTrace``.
+    """
+    # pass 1: real cost per state + subtree best via iterative DFS memo
+    cost: dict = {}
+    for s in nodes:
+        cost[s] = evaluator.paper_cost(s)
+    sub_best: dict = {}
+
+    def _subtree_best(state) -> float:
+        stack = [state]
+        while stack:
+            s = stack[-1]
+            if s in sub_best:
+                stack.pop()
+                continue
+            node = nodes.get(s)
+            kids = [c for c in (node.children.values() if node else ())
+                    if c != s and c in nodes]
+            missing = [c for c in kids if c not in sub_best]
+            if missing:
+                stack.extend(missing)
+                continue
+            stack.pop()
+            best = cost.get(s, float("inf"))
+            for c in kids:
+                best = min(best, sub_best[c])
+            sub_best[s] = best
+        return sub_best[state]
+
+    records: list[dict] = []
+    for s, node in nodes.items():
+        if node.visits < min_visits or not node.children:
+            continue
+        bd = evaluator.evaluate(s)
+        child_rows = []
+        child_visit_sum = 0
+        for action, child in node.children.items():
+            if child == s or child not in nodes:
+                continue
+            v = nodes[child].visits
+            child_visit_sum += v
+            child_rows.append({
+                "feat": [round(x, 6)
+                         for x in featurizer.action_features(action)],
+                "visits": v,
+                "subtree_best": round(_subtree_best(child), 6),
+            })
+        if not child_rows:
+            continue
+        residual = node.visits - child_visit_sum
+        if residual > 0:
+            from repro.core.actions import STOP
+            child_rows.append({
+                "feat": [round(x, 6)
+                         for x in featurizer.action_features(STOP)],
+                "visits": residual,
+                "subtree_best": round(cost.get(s, 0.0), 6),
+            })
+        records.append({
+            "state": [round(x, 6)
+                      for x in featurizer.state_features(s, bd)],
+            "visits": node.visits,
+            "cost": round(cost.get(s, 0.0), 6),
+            "subtree_best": round(_subtree_best(s), 6),
+            "actions": child_rows,
+        })
+    if len(records) > max_nodes:
+        records.sort(key=lambda r: -r["visits"])
+        records = records[:max_nodes]
+    root_cost = cost.get(root, evaluator.paper_cost(root))
+    return SearchTrace(
+        tag=tag, fingerprint=fingerprint, mesh=mesh or {},
+        backend=backend, seed=seed, root_cost=round(root_cost, 6),
+        best_cost=round(best_cost, 6), nodes=records)

@@ -1,0 +1,251 @@
+"""Learned-guidance driver: collect traces, train, evaluate transfer.
+
+The three stages of ``docs/guidance.md`` as one CLI::
+
+    # 1. collect search traces from zoo architectures (deliberately no
+    #    plan store — cache hits would skip the searches)
+    python -m repro.launch.guide collect --archs qwen2_05b,phi3_mini \\
+        --mesh 4x2 --out traces/
+
+    # 2. train the policy/value model, holding out architectures
+    python -m repro.launch.guide train --traces traces/ \\
+        --holdout llama3_8b --out guide.json
+
+    # 3. evaluate guided-vs-unguided transfer on (held-out) archs
+    python -m repro.launch.guide eval --model guide.json \\
+        --archs llama3_8b --mesh 4x2
+
+``collect`` runs plain MCTS (uniform priors, no value bootstrap — the
+searches behave exactly as unguided ones) with a ``TraceStore``
+collector attached; ``train`` fits the pure-numpy MLP heads with
+held-out-architecture metrics; ``eval`` runs the
+``repro.guidance.evaluate`` protocol and prints per-seed
+evals-to-match / cost-at-budget rows.
+
+``benchmarks/guidance.py`` drives these same functions end-to-end
+(train on 8 zoo configs, evaluate on 2 held-out + the full-size
+programs) and writes ``BENCH_guidance.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core.cost_model import HardwareSpec, MeshSpec
+from repro.core.evaluator import IncrementalEvaluator
+from repro.core.mcts import MCTS, MCTSConfig
+from repro.guidance import (GuidanceSpec, PolicyValueModel, TraceStore,
+                            guided_comparison, summarize_rows,
+                            train_model, uniform_guidance)
+from repro.launch.specs import step_and_inputs
+from repro.launch.zoo import ZOO_SHAPE, ZOO_SHAPE_FULL, parse_mesh
+
+# collection needs deeper trees than the zoo's default portfolio budget:
+# more trajectories exhaust the root's untried actions and revisit good
+# subtrees, which is what produces informative visit-count targets
+COLLECT_CFG = MCTSConfig(rounds=8, trajectories_per_round=48)
+
+
+def _setup(arch: str, mesh: MeshSpec, *, full: bool = False,
+           shape=None, hw: HardwareSpec = HardwareSpec(),
+           min_dims: int = 10):
+    """Trace + analyze one config and build (cost model, actions)."""
+    from repro.api import Session
+    cfg = get_config(arch)
+    cfg = cfg if full else cfg.reduced()
+    shape = shape or (ZOO_SHAPE_FULL if full else ZOO_SHAPE)
+    fn, args, _ = step_and_inputs(cfg, shape)
+    sess = Session(fn, args)
+    cm = sess._cost_model(mesh, hw)
+    actions = sess._actions(mesh, min_dims)
+    return cm, actions
+
+
+def collect_arch(arch: str, mesh: MeshSpec, store: TraceStore, *,
+                 seeds: tuple[int, ...] = (0, 1),
+                 cfg: MCTSConfig | None = None,
+                 full: bool = False, shape=None,
+                 verbose: bool = True) -> list[dict]:
+    """Run trace-collecting (but otherwise unguided) MCTS on one arch.
+
+    Args:
+        arch: config name from ``repro.configs.ARCH_IDS``.
+        mesh: mesh to search over.
+        store: trace sink.
+        seeds: one search (and one trace) per seed.
+        cfg: search budget (default :data:`COLLECT_CFG`).
+        full: production config instead of ``reduced()``.
+        shape: train cell override.
+        verbose: print one line per search.
+
+    Returns:
+        One summary dict per seed (cost, evaluations, seconds).
+    """
+    cfg = cfg or COLLECT_CFG
+    cm, actions = _setup(arch, mesh, full=full, shape=shape)
+    rows = []
+    for seed in seeds:
+        spec = uniform_guidance(collector=store, tag=arch)
+        run_cfg = dataclasses.replace(cfg, seed=seed, guidance=spec)
+        ev = IncrementalEvaluator(cm)
+        t0 = time.perf_counter()
+        res = MCTS(ev, actions, run_cfg).search()
+        secs = time.perf_counter() - t0
+        rows.append({"arch": arch, "seed": seed,
+                     "cost": round(res.best_cost, 6),
+                     "evaluations": res.evaluations,
+                     "seconds": round(secs, 2)})
+        if verbose:
+            print(f"[collect {arch:>16} seed={seed}] "
+                  f"cost={res.best_cost:.4f} evals={res.evaluations} "
+                  f"{secs:5.2f}s", flush=True)
+    return rows
+
+
+def eval_arch(arch: str, mesh: MeshSpec, guidance: GuidanceSpec, *,
+              seeds: tuple[int, ...] = (0, 1),
+              cfg: MCTSConfig | None = None,
+              full: bool = False, shape=None,
+              verbose: bool = True) -> list[dict]:
+    """Guided-vs-unguided comparison rows for one architecture.
+
+    Args:
+        arch: config name.
+        mesh: mesh to search over.
+        guidance: the trained spec for the guided arm.
+        seeds: one comparison per seed.
+        cfg: search budget template.
+        full: production config instead of ``reduced()``.
+        shape: train cell override.
+        verbose: print one line per seed.
+
+    Returns:
+        :func:`repro.guidance.evaluate.guided_comparison` rows, each
+        annotated with ``"arch"``.
+    """
+    cm, actions = _setup(arch, mesh, full=full, shape=shape)
+    rows = guided_comparison(cm, actions, guidance=guidance,
+                             base_cfg=cfg, seeds=seeds)
+    for r in rows:
+        r["arch"] = arch
+        if verbose:
+            ratio = r["evals_ratio"]
+            print(f"[eval {arch:>16} seed={r['seed']}] "
+                  f"unguided={r['unguided_cost']:.4f}"
+                  f"@{r['unguided_best_at']} "
+                  f"guided={r['guided_cost']:.4f} "
+                  f"match@{r['evals_to_match']} "
+                  f"ratio={'-' if ratio is None else f'{ratio:.2f}'} "
+                  f"better={'Y' if r['better_at_budget'] else 'N'}",
+                  flush=True)
+    return rows
+
+
+def main(argv: list[str] | None = None) -> dict:
+    """CLI entry point; returns the record of the subcommand run.
+
+    Args:
+        argv: argument list (defaults to ``sys.argv[1:]``).
+
+    Returns:
+        A JSON-friendly record (also printed / written where the
+        subcommand defines an output).
+    """
+    ap = argparse.ArgumentParser(
+        description="Collect search traces, train and evaluate the "
+                    "guidance model.")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    c = sub.add_parser("collect", help="run trace-collecting searches")
+    c.add_argument("--archs", default=",".join(ARCH_IDS))
+    c.add_argument("--mesh", default="4x2")
+    c.add_argument("--out", default="traces",
+                   help="TraceStore directory")
+    c.add_argument("--seeds", type=int, default=2)
+    c.add_argument("--rounds", type=int, default=COLLECT_CFG.rounds)
+    c.add_argument("--trajectories", type=int,
+                   default=COLLECT_CFG.trajectories_per_round)
+    c.add_argument("--full", action="store_true")
+
+    t = sub.add_parser("train", help="fit the policy/value model")
+    t.add_argument("--traces", default="traces")
+    t.add_argument("--out", default="guide.json")
+    t.add_argument("--holdout", default="",
+                   help="comma-separated arch tags held out of training")
+    t.add_argument("--epochs", type=int, default=300)
+    t.add_argument("--hidden", default="32,32")
+    t.add_argument("--lr", type=float, default=5e-3)
+    t.add_argument("--seed", type=int, default=0)
+
+    e = sub.add_parser("eval", help="guided-vs-unguided transfer eval")
+    e.add_argument("--model", default="guide.json")
+    e.add_argument("--archs", default=",".join(ARCH_IDS))
+    e.add_argument("--mesh", default="4x2")
+    e.add_argument("--seeds", type=int, default=2)
+    e.add_argument("--rounds", type=int, default=4)
+    e.add_argument("--trajectories", type=int, default=16)
+    e.add_argument("--prior-scale", type=float, default=1.5)
+    e.add_argument("--value-weight", type=float, default=0.0,
+                   help="value-bootstrap blend (replaces playouts; off "
+                        "by default — see docs/guidance.md)")
+    e.add_argument("--full", action="store_true")
+    e.add_argument("--out", default="",
+                   help="optional JSON output path")
+    args = ap.parse_args(argv)
+
+    if args.cmd == "collect":
+        mesh = parse_mesh(args.mesh)
+        store = TraceStore(args.out)
+        cfg = dataclasses.replace(
+            COLLECT_CFG, rounds=args.rounds,
+            trajectories_per_round=args.trajectories)
+        rows = []
+        for arch in args.archs.split(","):
+            rows += collect_arch(arch, mesh, store,
+                                 seeds=tuple(range(args.seeds)),
+                                 cfg=cfg, full=args.full)
+        print(f"trace store: {len(store)} trace(s) in {args.out}")
+        return {"collected": rows, "traces": len(store)}
+
+    if args.cmd == "train":
+        store = TraceStore(args.traces)
+        traces = store.load_all()
+        holdout = tuple(h for h in args.holdout.split(",") if h)
+        hidden = tuple(int(h) for h in args.hidden.split(","))
+        model, metrics = train_model(traces, holdout_tags=holdout,
+                                     hidden=hidden, epochs=args.epochs,
+                                     lr=args.lr, seed=args.seed)
+        model.save(args.out)
+        print(json.dumps(metrics, indent=2))
+        print(f"wrote {args.out} ({len(traces)} traces, "
+              f"holdout={list(holdout) or '-'})")
+        return {"metrics": metrics, "model": args.out}
+
+    mesh = parse_mesh(args.mesh)
+    guidance = GuidanceSpec(model=PolicyValueModel.load(args.model),
+                            prior_scale=args.prior_scale,
+                            value_weight=args.value_weight)
+    cfg = MCTSConfig(rounds=args.rounds,
+                     trajectories_per_round=args.trajectories)
+    rows = []
+    for arch in args.archs.split(","):
+        rows += eval_arch(arch, mesh, guidance,
+                          seeds=tuple(range(args.seeds)), cfg=cfg,
+                          full=args.full)
+    summary = summarize_rows(rows)
+    print(json.dumps(summary))
+    record = {"rows": rows, "summary": summary,
+              "model": args.model, "mesh": args.mesh}
+    if args.out:
+        pathlib.Path(args.out).write_text(json.dumps(record, indent=2))
+        print(f"wrote {args.out}")
+    return record
+
+
+if __name__ == "__main__":
+    main()

@@ -28,6 +28,12 @@ DOC_GATED_FILES = [
     "src/repro/launch/measure.py",
     "src/repro/core/mesh_search.py",
     "src/repro/core/verify.py",
+    "src/repro/guidance/features.py",
+    "src/repro/guidance/trace.py",
+    "src/repro/guidance/model.py",
+    "src/repro/guidance/spec.py",
+    "src/repro/guidance/evaluate.py",
+    "src/repro/launch/guide.py",
 ]
 
 RULES = "D101,D102,D103,D417"

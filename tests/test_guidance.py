@@ -1,0 +1,310 @@
+"""Learned search guidance tests.
+
+The load-bearing contract is **bit-identity**: guidance disabled — or
+enabled with a uniform (zero-weight) policy and no value bootstrap —
+must reproduce vanilla UCT exactly: same RNG stream, same visited
+states and visit counts, same evaluation count, same best plan.  Both
+the MCTS and (sequential) portfolio backends are pinned.  On top of
+that: featurizer invariants, model JSON round-trips, trace collection
+as a pure side effect, the evaluation budget cap, and the
+``Request.guidance`` config-injection helper.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.actions import build_action_space, valid_actions
+from repro.core.cost_model import CostModel, HardwareSpec, MeshSpec, \
+    ShardingState
+from repro.core.evaluator import IncrementalEvaluator
+from repro.core.mcts import MCTS, MCTSBackend, MCTSConfig
+from repro.core.partitioner import analyze
+from repro.core.portfolio import PortfolioBackend, PortfolioConfig, \
+    PortfolioMember
+from repro.guidance import (GuidanceSpec, PolicyValueModel, TraceStore,
+                            train_model, uniform_guidance)
+from repro.guidance.features import ACTION_DIM, STATE_DIM, \
+    GuidanceFeaturizer
+
+
+def sh(*s):
+    return jax.ShapeDtypeStruct(s, jnp.float32)
+
+
+def mlp(x, w1, w2):
+    return jax.nn.relu(x @ w1) @ w2
+
+
+MLP_ARGS = (sh(1024, 512), sh(512, 2048), sh(2048, 512))
+MESH = MeshSpec(("data", "model"), (4, 4))
+FAST = MCTSConfig(rounds=3, trajectories_per_round=12)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    art = analyze(mlp, MLP_ARGS)
+    cm = CostModel(art.prog, art.nda, art.analysis, MESH, HardwareSpec())
+    actions = build_action_space(art.nda, art.analysis, MESH, min_dims=1)
+    return cm, actions
+
+
+def _run(cm, actions, cfg):
+    agent = MCTS(IncrementalEvaluator(cm), actions, cfg)
+    return agent, agent.search()
+
+
+def _trained_spec(cm, actions, tmp_path, **kw):
+    """Collect two fast traces and train a tiny model on them."""
+    store = TraceStore(tmp_path / "traces")
+    for seed in (0, 1):
+        cfg = dataclasses.replace(
+            FAST, seed=seed,
+            guidance=uniform_guidance(collector=store, tag="mlp"))
+        _run(cm, actions, cfg)
+    model, _ = train_model(store.load_all(), epochs=30, seed=0)
+    return GuidanceSpec(model=model, **kw)
+
+
+# --- bit-identity ------------------------------------------------------------
+
+
+class TestBitIdentity:
+    def test_uniform_guided_mcts_is_vanilla_uct(self, setup):
+        """Uniform prior + no bootstrap == guidance=None, bit for bit."""
+        cm, actions = setup
+        a, r0 = _run(cm, actions, dataclasses.replace(FAST, guidance=None))
+        b, r1 = _run(cm, actions,
+                     dataclasses.replace(FAST, guidance=uniform_guidance()))
+        assert r1.best_cost == r0.best_cost          # exact, no tolerance
+        assert r1.best_state == r0.best_state
+        assert r1.best_actions == r0.best_actions
+        assert r1.evaluations == r0.evaluations
+        assert r1.history == r0.history
+        assert r1.curve == r0.curve
+        assert set(a.nodes) == set(b.nodes)          # same visited states
+        for s, n in a.nodes.items():
+            assert b.nodes[s].visits == n.visits
+            assert b.nodes[s].value == n.value
+        # identical number of RNG draws: streams end in the same state
+        assert a.rng.random() == b.rng.random()
+
+    def test_collector_is_pure_side_effect(self, setup, tmp_path):
+        cm, actions = setup
+        _, r0 = _run(cm, actions, FAST)
+        store = TraceStore(tmp_path)
+        spec = uniform_guidance(collector=store, tag="mlp")
+        _, r1 = _run(cm, actions, dataclasses.replace(FAST, guidance=spec))
+        assert r1.best_cost == r0.best_cost
+        assert r1.evaluations == r0.evaluations
+        assert len(store) == 1                       # ...but the trace exists
+
+    def test_uniform_guided_portfolio_is_vanilla(self, setup):
+        cm, actions = setup
+        members = tuple(
+            PortfolioMember("mcts", seed=s,
+                            config=dataclasses.replace(FAST, seed=s))
+            for s in (0, 1))
+        base = PortfolioConfig(members=members, max_workers=1)
+        guided = PortfolioConfig(members=members, max_workers=1,
+                                 guidance=uniform_guidance())
+        r0 = PortfolioBackend().search(IncrementalEvaluator(cm), actions,
+                                       base)
+        r1 = PortfolioBackend().search(IncrementalEvaluator(cm), actions,
+                                       guided)
+        assert r1.best_cost == r0.best_cost
+        assert r1.best_state == r0.best_state
+        assert r1.evaluations == r0.evaluations
+        assert [m.best_cost for m in r1.members] == \
+            [m.best_cost for m in r0.members]
+
+    def test_uniform_playout_restriction_is_identity(self, setup):
+        cm, actions = setup
+        spec = uniform_guidance()
+        guide = spec.bind(IncrementalEvaluator(cm), actions)
+        s = ShardingState()
+        av = valid_actions(actions, s)
+        assert guide.playout_actions(s, av) == av
+
+
+# --- featurizer --------------------------------------------------------------
+
+
+class TestFeaturizer:
+    def test_dims_and_range(self, setup):
+        cm, actions = setup
+        ev = IncrementalEvaluator(cm)
+        feat = GuidanceFeaturizer(cm)
+        s = ShardingState()
+        sf = feat.state_features(s, ev.evaluate(s))
+        assert len(sf) == STATE_DIM
+        assert all(0.0 <= x <= 1.0 for x in sf)
+        for a in valid_actions(actions, s)[:8]:
+            af = feat.action_features(a)
+            assert len(af) == ACTION_DIM
+            assert all(0.0 <= x <= 1.0 for x in af)
+
+    def test_deterministic(self, setup):
+        cm, actions = setup
+        ev = IncrementalEvaluator(cm)
+        s = ShardingState()
+        f1 = GuidanceFeaturizer(cm).state_features(s, ev.evaluate(s))
+        f2 = GuidanceFeaturizer(cm).state_features(s, ev.evaluate(s))
+        assert f1 == f2
+
+
+# --- model -------------------------------------------------------------------
+
+
+class TestModel:
+    def test_uniform_priors_are_exactly_uniform(self):
+        m = PolicyValueModel.uniform()
+        for n in (1, 2, 3, 7):
+            pri = m.predict_priors([0.3] * STATE_DIM,
+                                   [[0.1 * i] * ACTION_DIM
+                                    for i in range(n)])
+            assert pri == [1.0 / n] * n              # bitwise, not approx
+
+    def test_json_round_trip_is_bit_exact(self, setup, tmp_path):
+        cm, actions = setup
+        spec = _trained_spec(cm, actions, tmp_path)
+        m = spec.model
+        m2 = PolicyValueModel.from_json(m.to_json())
+        sf = [0.4] * STATE_DIM
+        afs = [[0.2] * ACTION_DIM, [0.8] * ACTION_DIM]
+        assert m2.predict_priors(sf, afs) == m.predict_priors(sf, afs)
+        assert m2.predict_value(sf) == m.predict_value(sf)
+
+    def test_save_load_file(self, setup, tmp_path):
+        cm, actions = setup
+        spec = _trained_spec(cm, actions, tmp_path)
+        path = tmp_path / "guide.json"
+        spec.model.save(path)
+        m2 = PolicyValueModel.load(path)
+        sf = [0.5] * STATE_DIM
+        assert m2.predict_value(sf) == spec.model.predict_value(sf)
+
+    def test_trained_priors_are_a_distribution(self, setup, tmp_path):
+        cm, actions = setup
+        spec = _trained_spec(cm, actions, tmp_path)
+        ev = IncrementalEvaluator(cm)
+        guide = spec.bind(ev, actions)
+        s = ShardingState()
+        av = valid_actions(actions, s)
+        pri = guide.priors(s, av)
+        assert len(pri) == len(av)
+        assert all(p >= 0.0 for p in pri)
+        assert abs(sum(pri) - 1.0) < 1e-9
+
+    def test_holdout_split_metrics(self, setup, tmp_path):
+        cm, actions = setup
+        store = TraceStore(tmp_path)
+        for tag, seed in (("a", 0), ("b", 1)):
+            cfg = dataclasses.replace(
+                FAST, seed=seed,
+                guidance=uniform_guidance(collector=store, tag=tag))
+            _run(cm, actions, cfg)
+        _, metrics = train_model(store.load_all(), holdout_tags=("b",),
+                                 epochs=10, seed=0)
+        assert metrics["policy_train"]["groups"] > 0
+        assert "policy_holdout" in metrics
+
+
+# --- search integration ------------------------------------------------------
+
+
+class TestSearchIntegration:
+    def test_collected_trace_contents(self, setup, tmp_path):
+        cm, actions = setup
+        store = TraceStore(tmp_path)
+        cfg = dataclasses.replace(
+            FAST, guidance=uniform_guidance(collector=store, tag="mlp"))
+        _, res = _run(cm, actions, cfg)
+        (trace,) = store.load_all()
+        assert trace.tag == "mlp"
+        assert trace.backend == "mcts"
+        assert trace.fingerprint                     # real fp, not ""
+        assert trace.best_cost == round(res.best_cost, 6)
+        assert trace.nodes
+        for rec in trace.nodes:
+            assert len(rec["state"]) == STATE_DIM
+            # subtree best is the cheapest real cost below, never above
+            # the node's own cost
+            assert rec["subtree_best"] <= rec["cost"] + 1e-9
+            for row in rec["actions"]:
+                assert len(row["feat"]) == ACTION_DIM
+
+    def test_max_evaluations_budget(self, setup):
+        cm, actions = setup
+        _, free = _run(cm, actions, FAST)
+        budget = free.evaluations // 2
+        _, capped = _run(cm, actions,
+                         dataclasses.replace(FAST,
+                                             max_evaluations=budget))
+        assert capped.evaluations < free.evaluations
+        # the cap stops new trajectories; one in-flight trajectory may
+        # overshoot by at most its own evaluations
+        assert capped.evaluations <= budget + 2 * FAST.max_depth
+
+    def test_curve_is_monotone_and_ends_at_best(self, setup):
+        cm, actions = setup
+        _, res = _run(cm, actions, FAST)
+        evals = [e for e, _ in res.curve]
+        costs = [c for _, c in res.curve]
+        assert evals == sorted(evals)
+        assert costs == sorted(costs, reverse=True)
+        assert costs[-1] == res.best_cost
+        assert evals[-1] <= res.evaluations
+
+    def test_trained_guidance_searches_soundly(self, setup, tmp_path):
+        """A genuinely non-uniform policy still returns a real cost."""
+        cm, actions = setup
+        spec = _trained_spec(cm, actions, tmp_path, prior_scale=1.5)
+        _, res = _run(cm, actions,
+                      dataclasses.replace(FAST, guidance=spec))
+        ev = IncrementalEvaluator(cm)
+        assert res.best_cost == pytest.approx(ev.paper_cost(res.best_state))
+
+    def test_value_bootstrap_keeps_real_best_cost(self, setup, tmp_path):
+        """Bootstrapped rewards never leak into best-cost bookkeeping."""
+        cm, actions = setup
+        spec = _trained_spec(cm, actions, tmp_path, value_weight=0.5)
+        agent = MCTS(IncrementalEvaluator(cm), actions,
+                     dataclasses.replace(FAST, guidance=spec))
+        assert agent.guide.has_value
+        res = agent.search()
+        ev = IncrementalEvaluator(cm)
+        assert res.best_cost == pytest.approx(ev.paper_cost(res.best_state))
+
+
+# --- config plumbing ---------------------------------------------------------
+
+
+class TestConfigPlumbing:
+    def test_with_guidance_injection(self):
+        from repro.api import _with_guidance
+        from repro.core.portfolio import PortfolioConfig
+        spec = uniform_guidance()
+        # None config -> defaults with guidance attached
+        cfg = _with_guidance(MCTSBackend(), None, spec)
+        assert isinstance(cfg, MCTSConfig) and cfg.guidance is spec
+        pcfg = _with_guidance(PortfolioBackend(), None, spec)
+        assert isinstance(pcfg, PortfolioConfig) and pcfg.guidance is spec
+        # existing config gains the spec without other changes
+        cfg = _with_guidance(MCTSBackend(), FAST, spec)
+        assert cfg.guidance is spec and cfg.rounds == FAST.rounds
+        # explicitly-guided configs are left alone
+        other = uniform_guidance()
+        pre = dataclasses.replace(FAST, guidance=other)
+        assert _with_guidance(MCTSBackend(), pre, spec).guidance is other
+        # no spec -> untouched
+        assert _with_guidance(MCTSBackend(), FAST, None) is FAST
+
+    def test_spec_is_hashable_and_replaceable(self):
+        spec = uniform_guidance()
+        hash(spec)                                   # usable in frozen configs
+        tagged = dataclasses.replace(spec, tag="llama3_405b")
+        assert tagged.tag == "llama3_405b"
+        assert tagged is not spec

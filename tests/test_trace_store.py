@@ -1,0 +1,205 @@
+"""TraceStore persistence, versioning and crash-safety tests.
+
+Mirrors the ``PlanStore`` contract (``tests/test_plan_store.py``): JSON
+round-trip, key semantics (same search overwrites, different seed keys
+apart), schema/feature-version invalidation, corrupt-entry tolerance,
+and the atomic-write temp-file hygiene under crashes and concurrent
+writers.
+"""
+
+import json
+import os
+import threading
+
+import pytest
+
+from repro.guidance.features import ACTION_DIM, FEATURE_VERSION, STATE_DIM
+from repro.guidance.trace import (SearchTrace, TRACE_SCHEMA, TraceStore,
+                                  trace_key)
+
+
+def mk_trace(tag="mlp", seed=0, fingerprint="f" * 64, **over) -> SearchTrace:
+    """A tiny synthetic trace (store tests don't need a real search)."""
+    node = {
+        "state": [0.1] * STATE_DIM,
+        "visits": 5,
+        "cost": 0.9,
+        "subtree_best": 0.4,
+        "actions": [
+            {"feat": [0.2] * ACTION_DIM, "visits": 3, "subtree_best": 0.4},
+            {"feat": [0.0] * ACTION_DIM, "visits": 2, "subtree_best": 0.9},
+        ],
+    }
+    d = dict(tag=tag, fingerprint=fingerprint,
+             mesh={"axes": ["data", "model"], "sizes": [4, 2]},
+             backend="mcts", seed=seed, root_cost=1.0, best_cost=0.4,
+             nodes=[node])
+    d.update(over)
+    return SearchTrace(**d)
+
+
+class TestRoundTrip:
+    def test_put_load_round_trip(self, tmp_path):
+        store = TraceStore(tmp_path)
+        t = mk_trace()
+        store.put(t)
+        got = store.load_all()
+        assert len(got) == 1
+        g = got[0]
+        assert g.tag == t.tag
+        assert g.fingerprint == t.fingerprint
+        assert g.mesh == t.mesh
+        assert g.seed == t.seed
+        assert g.nodes == t.nodes
+        assert g.best_cost == t.best_cost
+        assert g.created > 0          # stamped on put
+
+    def test_same_key_overwrites(self, tmp_path):
+        store = TraceStore(tmp_path)
+        store.put(mk_trace(best_cost=0.9))
+        store.put(mk_trace(best_cost=0.3))
+        assert len(store) == 1
+        assert store.load_all()[0].best_cost == 0.3
+
+    def test_different_seed_keys_apart(self, tmp_path):
+        store = TraceStore(tmp_path)
+        store.put(mk_trace(seed=0))
+        store.put(mk_trace(seed=1))
+        store.put(mk_trace(seed=0, tag="other"))
+        assert len(store) == 3
+        assert trace_key(mk_trace(seed=0)) != trace_key(mk_trace(seed=1))
+
+    def test_tags_filter_and_sorted_order(self, tmp_path):
+        store = TraceStore(tmp_path)
+        for tag in ("b", "a", "c"):
+            store.put(mk_trace(tag=tag))
+        assert [t.tag for t in store.load_all()] == ["a", "b", "c"]
+        assert [t.tag for t in store.load_all(tags=("a", "c"))] == ["a", "c"]
+
+    def test_clear(self, tmp_path):
+        store = TraceStore(tmp_path)
+        store.put(mk_trace(seed=0))
+        store.put(mk_trace(seed=1))
+        assert store.clear() == 2
+        assert len(store) == 0
+        assert store.load_all() == []
+
+    def test_empty_directory(self, tmp_path):
+        store = TraceStore(tmp_path / "never-created")
+        assert len(store) == 0
+        assert store.load_all() == []
+
+
+class TestVersioning:
+    def test_schema_mismatch_dropped(self, tmp_path):
+        store = TraceStore(tmp_path)
+        store.put(mk_trace(seed=0))
+        store.put(mk_trace(seed=1, schema=TRACE_SCHEMA + 1))
+        assert len(store) == 2                    # both committed...
+        assert len(store.load_all()) == 1         # ...one readable
+
+    def test_feature_version_mismatch_dropped(self, tmp_path):
+        store = TraceStore(tmp_path)
+        store.put(mk_trace(seed=0))
+        store.put(mk_trace(seed=1, feature_version=FEATURE_VERSION + 1))
+        got = store.load_all()
+        assert [t.seed for t in got] == [0]
+
+    def test_feature_version_none_disables_check(self, tmp_path):
+        store = TraceStore(tmp_path)
+        store.put(mk_trace(seed=0))
+        store.put(mk_trace(seed=1, feature_version=FEATURE_VERSION + 1))
+        assert len(store.load_all(feature_version=None)) == 2
+
+    def test_schema_changes_the_key(self):
+        # a schema bump must not overwrite older-schema entries
+        assert trace_key(mk_trace()) != \
+            trace_key(mk_trace(schema=TRACE_SCHEMA + 1))
+
+
+class TestCorruption:
+    def test_corrupt_entry_is_skipped(self, tmp_path):
+        store = TraceStore(tmp_path)
+        store.put(mk_trace())
+        (tmp_path / ("0" * 64 + ".json")).write_text("{torn write")
+        (tmp_path / ("1" * 64 + ".json")).write_text('{"tag": 17}')
+        got = store.load_all()
+        assert len(got) == 1
+        assert got[0].tag == "mlp"
+
+    def test_unknown_keys_ignored(self, tmp_path):
+        store = TraceStore(tmp_path)
+        d = mk_trace().as_dict()
+        d["future_field"] = {"x": 1}
+        p = tmp_path / (trace_key(mk_trace()) + ".json")
+        p.write_text(json.dumps(d))
+        assert len(store.load_all()) == 1
+
+
+class TestTempFileHygiene:
+    def test_stale_tmps_removed_on_open(self, tmp_path):
+        stale = tmp_path / "put-999-abc.tmp"
+        stale.write_text("{truncated")
+        old = 1_000_000.0                       # 1970-ish mtime
+        os.utime(stale, (old, old))
+        fresh = tmp_path / "put-998-def.tmp"
+        fresh.write_text("{live writer}")
+        TraceStore(tmp_path)                    # default 1h threshold
+        assert not stale.exists()               # crash leftover removed
+        assert fresh.exists()                   # live writer untouched
+
+    def test_threshold_zero_removes_everything(self, tmp_path):
+        t = tmp_path / "put-1-x.tmp"
+        t.write_text("x")
+        os.utime(t, (1_000_000.0, 1_000_000.0))
+        TraceStore(tmp_path, stale_tmp_seconds=0)
+        assert not t.exists()
+
+    def test_put_failure_leaves_no_tmp(self, tmp_path, monkeypatch):
+        store = TraceStore(tmp_path)
+
+        def boom(*a, **k):
+            raise RuntimeError("disk full")
+
+        monkeypatch.setattr(json, "dump", boom)
+        with pytest.raises(RuntimeError):
+            store.put(mk_trace())
+        assert list(tmp_path.glob("*.tmp")) == []
+        assert len(store) == 0
+
+    def test_two_concurrent_writers_commit_valid_entries(self, tmp_path):
+        """Two portfolio members hammering one key: every committed entry
+        must be complete valid JSON (atomic rename), readers never
+        observe a torn write, and no temp files survive."""
+        errors = []
+
+        def writer():
+            store = TraceStore(tmp_path)
+            try:
+                for i in range(25):
+                    store.put(mk_trace(best_cost=0.01 * i))
+            except Exception as e:              # noqa: BLE001
+                errors.append(e)
+
+        def reader():
+            store = TraceStore(tmp_path)
+            try:
+                for _ in range(50):
+                    for t in store.load_all():
+                        assert t.tag == "mlp"
+                        assert len(t.nodes) == 1
+            except Exception as e:              # noqa: BLE001
+                errors.append(e)
+
+        threads = [threading.Thread(target=writer) for _ in range(2)]
+        threads.append(threading.Thread(target=reader))
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert errors == []
+        assert list(tmp_path.glob("*.tmp")) == []
+        entries = list(tmp_path.glob("*.json"))
+        assert len(entries) == 1                # one key, one entry
+        json.loads(entries[0].read_text())      # complete valid JSON
+        assert len(TraceStore(tmp_path).load_all()) == 1
