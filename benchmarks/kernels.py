@@ -1,0 +1,273 @@
+"""Kernel-aware partitioning benchmark — writes ``BENCH_kernels.json``.
+
+The end-to-end evidence for the fused-kernel refactor (docs/kernels.md),
+on two zoo models — one attention-dominated (qwen2_05b), one
+recurrence-dominated (recurrentgemma_2b):
+
+1. trace each model with kernel dispatch on (``use_pallas=True``) and
+   check the fused ops (``kernel:flash_attention``, ``kernel:rg_lru``,
+   + their backward kernels) appear in the IR;
+2. search a plan — the record keeps the per-site kernel-impl decision
+   (``plan.kernel_sites``);
+3. microbenchmark every (kernel, impl) at the traced shapes and fit
+   per-kernel effective rates (``measure.calibrate_kernels``), then
+   re-price every kernel site under the calibrated hardware;
+4. execute the winning fused plan *and* a plan searched over the
+   decomposed trace of the same model on a simulated device mesh
+   (``launch.measure.measure_plan`` subprocesses), giving the measured
+   fused-vs-decomposed runtime.
+
+Everything runs on the host CPU: Pallas executes in interpret mode, so
+absolute times are not accelerator times — the point is that the same
+predict → measure → calibrate loop the zoo uses covers kernel sites.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import time
+
+import jax
+
+from repro.api import Request, Session
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.core.cost_model import HardwareSpec, MeshSpec
+from repro.core.measure import calibrate_kernels
+from repro.core.search import BeamConfig
+from repro.kernels import ops, registry
+from repro.launch.specs import step_and_inputs
+from repro.models.sharding import KernelDispatch, kernel_dispatch
+
+# one attention model, one recurrence model (acceptance criteria)
+ARCHS = ("qwen2_05b", "recurrentgemma_2b")
+SHAPE = ShapeConfig("kernel_bench", seq_len=256, global_batch=8,
+                    kind="train")
+MESH = MeshSpec(("data", "model"), (2, 2))
+
+
+def _row(name, us, derived=""):
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def _timeit(f, n=3):
+    jax.block_until_ready(f())
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(f())
+    return (time.perf_counter() - t0) / n
+
+
+def _kernel_call(kernel: str, shapes, params: dict, impl: str):
+    """A zero-arg callable running one forced-impl kernel dispatch."""
+    disp = KernelDispatch(default_impl=impl)
+    key = jax.random.PRNGKey(0)
+    if kernel == "flash_attention":
+        q = jax.random.normal(key, shapes[0])
+        k = jax.random.normal(jax.random.fold_in(key, 1), shapes[1])
+        v = jax.random.normal(jax.random.fold_in(key, 2), shapes[2])
+        causal = bool(params.get("causal", True))
+
+        def call():
+            with kernel_dispatch(disp):
+                return ops.attention(q, k, v, causal=causal)
+        return call
+    if kernel == "rg_lru":
+        a = jax.nn.sigmoid(jax.random.normal(key, shapes[0]))
+        b = jax.random.normal(jax.random.fold_in(key, 1), shapes[1])
+
+        def call():
+            with kernel_dispatch(disp):
+                return ops.rg_lru(a, b)
+        return call
+    raise ValueError(f"no microbenchmark for kernel {kernel!r}")
+
+
+def _calibration_samples(prog, repeats: int) -> list[dict]:
+    """Time every (dispatch kernel, impl) at its traced shapes.
+
+    One sample per (kernel, feasible impl) per distinct kernel kind in
+    ``prog`` — the inputs ``measure.calibrate_kernels`` fits per-kernel
+    effective rates from.
+    """
+    samples: list[dict] = []
+    seen: set = set()
+    for op in prog.ops:
+        spec = registry.spec_for_prim(op.prim)
+        if spec is None or not spec.dispatch_site or spec.name in seen:
+            continue
+        seen.add(spec.name)
+        shapes = [tuple(prog.types[v].shape)
+                  for v in op.operands[:len(spec.operand_roles)]]
+        dims = spec.dims_from_shapes(shapes)
+        params = dict(op.params)
+        for impl in spec.impls:
+            if not spec.feasible(impl, dims):
+                continue
+            t = _timeit(_kernel_call(spec.name, shapes, params, impl),
+                        n=repeats)
+            samples.append({"kernel": spec.name, "impl": impl,
+                            "flops": spec.flops(dims, params),
+                            "measured_s": t,
+                            "dims": dims})
+            _row(f"kernels.calib.{spec.name}.{impl}", t * 1e6,
+                 f"flops={spec.flops(dims, params):.3e}")
+    return samples
+
+
+def _partition_arch(arch: str, hw: HardwareSpec) -> dict:
+    """Trace + search one model twice: fused-kernel and decomposed."""
+    req_kw = dict(mesh=MESH, hw=hw, backend="beam",
+                  search_config=BeamConfig(width=4, patience=1))
+    cfg = get_config(arch).reduced()
+
+    fn, args, names = step_and_inputs(
+        dataclasses.replace(cfg, use_pallas=True), SHAPE)
+    sess = Session(fn, args)
+    plan = sess.partition(Request(logical_axes=names, **req_kw))
+
+    fn_d, args_d, names_d = step_and_inputs(cfg, SHAPE)
+    sess_d = Session(fn_d, args_d)
+    plan_d = sess_d.partition(Request(logical_axes=names_d, **req_kw))
+    return {"arch": arch, "sess": sess, "plan": plan,
+            "sess_d": sess_d, "plan_d": plan_d}
+
+
+def _site_cost_rows(sess, plan, hw: HardwareSpec,
+                    hw_cal: HardwareSpec) -> list[dict]:
+    """Per-kernel-op cost rows under default and calibrated hardware."""
+    cm = sess._cost_model(MESH, hw)
+    cm_cal = cm.with_hardware(hw_cal)
+    color_axes, bits = plan.state.as_dicts()
+    _, suppressed = cm._chosen_suppressed(bits)
+    impls = dict(plan.state.kernel_impls)
+    by_op = {r["op"]: r for r in plan.kernel_sites}
+    rows = []
+    for i, op in enumerate(sess.artifacts.prog.ops):
+        spec = registry.spec_for_prim(op.prim)
+        if spec is None:
+            continue
+        site = by_op.get(i)
+        impl = (site["impl"] if site is not None
+                else impls.get(i, spec.default_impl))
+        comp, mem, coll, flops, comm = cm.op_cost_row(
+            i, color_axes, suppressed, impls)
+        comp_c, mem_c, coll_c, _, _ = cm_cal.op_cost_row(
+            i, color_axes, suppressed, impls)
+        rows.append({
+            "site": site["site"] if site is not None
+            else f"{spec.name}@{i}",
+            "op": i, "kernel": spec.name, "impl": impl,
+            "sharded": bool(site["sharded"]) if site is not None
+            else None,
+            "flops": flops, "comm_bytes": comm,
+            "compute_s": comp, "memory_s": mem, "collective_s": coll,
+            "compute_s_calibrated": comp_c,
+            "collective_s_calibrated": coll_c,
+            "rate_calibrated": cm_cal._kernel_rate(spec.name, impl),
+        })
+    return rows
+
+
+def _measure(ctx: dict, repeats: int, timeout: float) -> dict:
+    """Fused vs decomposed measured execution of one model's plans."""
+    from repro.launch import measure as lmeasure
+
+    out = {}
+    for label, plan, use_pallas in (
+            ("fused", ctx["plan"], True),
+            ("decomposed", ctx["plan_d"], False)):
+        r = lmeasure.measure_plan(
+            ctx["arch"], SHAPE, plan, reduced=True, repeats=repeats,
+            warmup=1, timeout=timeout, use_pallas=use_pallas)
+        cell = {"status": r.get("status", "error"),
+                "measured_s": r.get("measured_s", 0.0),
+                "compile_s": r.get("compile_s", 0.0),
+                "devices": r.get("devices", 0),
+                "predicted_cost": plan.cost,
+                "error": r.get("error", "")}
+        out[label] = cell
+        _row(f"kernels.{ctx['arch']}.measured_{label}",
+             cell["measured_s"] * 1e6,
+             f"status={cell['status']};cost={plan.cost:.4f}")
+    f, d = out["fused"], out["decomposed"]
+    if f["status"] == "ok" and d["status"] == "ok" \
+            and f["measured_s"] > 0.0:
+        out["decomposed_over_fused"] = round(
+            d["measured_s"] / f["measured_s"], 3)
+    return out
+
+
+def run(out: str = "BENCH_kernels.json", archs=ARCHS, repeats: int = 3,
+        timeout: float = 900.0, measure: bool = True) -> dict:
+    """Run the kernel-aware partitioning benchmark end to end.
+
+    Args:
+        out: output JSON path.
+        archs: zoo models to cover (default: one attention model, one
+            recurrence model).
+        repeats: timed calls per microbenchmark / measured cell.
+        timeout: per-cell measured-execution subprocess budget, seconds.
+        measure: execute the fused/decomposed plans on a simulated mesh
+            (off = static record only: trace/search/calibration).
+
+    Returns:
+        The record written to ``out``.
+    """
+    hw = HardwareSpec()
+    ctxs = [_partition_arch(arch, hw) for arch in archs]
+
+    samples: list[dict] = []
+    for ctx in ctxs:
+        samples += _calibration_samples(ctx["sess"].artifacts.prog,
+                                        repeats)
+    hw_cal = calibrate_kernels(samples, hw)
+
+    results = []
+    for ctx in ctxs:
+        prog = ctx["sess"].artifacts.prog
+        fused_ops = [{"op": i, "prim": op.prim}
+                     for i, op in enumerate(prog.ops)
+                     if registry.spec_for_prim(op.prim) is not None]
+        row = {
+            "model": ctx["arch"],
+            "fused_ops": fused_ops,
+            "decomposed_ops": len(ctx["sess_d"].artifacts.prog.ops),
+            "traced_ops": len(prog.ops),
+            "kernel_sites": ctx["plan"].kernel_sites,
+            "kernel_impl_decisions":
+                [[i, impl] for i, impl in ctx["plan"].state.kernel_impls],
+            "cost_rows": _site_cost_rows(ctx["sess"], ctx["plan"], hw,
+                                         hw_cal),
+            "fused_cost": ctx["plan"].cost,
+            "decomposed_cost": ctx["plan_d"].cost,
+        }
+        for r in row["cost_rows"]:
+            _row(f"kernels.{ctx['arch']}.site.{r['site']}",
+                 r["compute_s"] * 1e6,
+                 f"impl={r['impl']};sharded={r['sharded']};"
+                 f"cal_us={r['compute_s_calibrated'] * 1e6:.1f}")
+        if measure:
+            row["measured"] = _measure(ctx, repeats, timeout)
+        results.append(row)
+
+    record = {
+        "mesh": MESH.as_dict(),
+        "shape": {"seq_len": SHAPE.seq_len,
+                  "global_batch": SHAPE.global_batch,
+                  "kind": SHAPE.kind},
+        "calibration": {
+            "samples": samples,
+            "kernel_rates": dict(hw_cal.kernel_rates),
+        },
+        "results": results,
+    }
+    pathlib.Path(out).write_text(json.dumps(record, indent=2))
+    print(f"wrote {out}", flush=True)
+    return record
+
+
+if __name__ == "__main__":
+    run()

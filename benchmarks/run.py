@@ -30,7 +30,11 @@ Sections:
           model on 8 zoo architectures, evaluate guided-vs-unguided
           MCTS on the held-out archs and both full-size programs
           (writes BENCH_guidance.json); opt-in, minutes of wall time.
-- kernels: Pallas kernel microbenchmarks (interpret mode) vs jnp oracle.
+- kernels: Pallas kernel microbenchmarks (interpret mode) vs jnp oracle;
+          as an explicit section it also runs the kernel-aware
+          partitioning benchmark — fused-op trace, joint kernel+sharding
+          search, per-kernel calibration, measured fused-vs-decomposed
+          execution (writes BENCH_kernels.json, see docs/kernels.md).
 """
 
 from __future__ import annotations
@@ -243,6 +247,10 @@ def main() -> None:
     ap.add_argument("--fullscale-smoke", action="store_true",
                     help="fullscale CI mode: analyze one config, no "
                          "search, enforce oracle + baseline gates")
+    ap.add_argument("--kernels-out", default="BENCH_kernels.json")
+    ap.add_argument("--kernels-no-measure", action="store_true",
+                    help="kernels section: skip the measured-execution "
+                         "subprocesses (static record only)")
     ap.add_argument("--guidance-out", default="BENCH_guidance.json")
     ap.add_argument("--guidance-smoke", action="store_true",
                     help="guidance CI mode: two reduced configs, tiny "
@@ -279,6 +287,10 @@ def main() -> None:
         guidance.run(out=args.guidance_out, smoke=args.guidance_smoke)
     if args.section in ("all", "kernels"):
         kernel_micro()
+    if args.section == "kernels":       # opt-in: executes real programs
+        from benchmarks import kernels
+        kernels.run(out=args.kernels_out,
+                    measure=not args.kernels_no_measure)
 
 
 if __name__ == "__main__":

@@ -53,7 +53,8 @@ from repro.core.mesh_search import MeshCandidate, candidate_meshes
 from repro.core.partitioner import (ShardingPlan, ToastArtifacts,  # noqa: F401
                                     _constraint_specs, _logical_rules,
                                     _state_specs, analyze,
-                                    flatten_logical_axes)
+                                    flatten_logical_axes,
+                                    kernel_site_records)
 from repro.core.search import SearchBackend, get_backend
 from repro.core.verify import (Finding, VerifyReport,  # noqa: F401
                                attach_conformance, conformance_check,
@@ -677,4 +678,5 @@ class Session:
             fingerprint=self.fingerprint,
             out_specs=_state_specs(cm, state, art.prog.outputs),
             logical_axes=flat_names,
+            kernel_sites=kernel_site_records(cm, state),
         )

@@ -61,6 +61,11 @@ class ModelConfig:
     # which side of the attention-score sequence conflict to shard
     # (the paper's resolution_order, exposed per-model): "q" or "kv"
     score_shard_dim: str = "q"
+    # route attention / recurrence layers through the fused Pallas
+    # kernels (repro.kernels.ops).  The tracer records those calls as
+    # single fused IR ops, so flipping this changes the analyzed
+    # program (and its fingerprint) — off by default.
+    use_pallas: bool = False
     # source provenance tag from the assignment table
     source: str = ""
 

@@ -40,6 +40,7 @@ import numpy as np
 from repro.core.conflicts import ConflictAnalysis
 from repro.core.ir import Program
 from repro.core.nda import NDAResult
+from repro.kernels import registry as kernel_registry
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,6 +64,11 @@ class HardwareSpec:
         axis_bw: per-mesh-axis bandwidth overrides as sorted
             ``((axis, bytes/s), ...)`` pairs; axes absent here fall back
             to ``ici_bw`` / ``dcn_bw``.
+        kernel_rates: calibrated effective FLOP/s per fused kernel
+            implementation, as sorted ``(("<kernel>:<impl>", rate), ...)``
+            pairs (``repro.core.measure.calibrate_kernels`` fits them
+            against real fused-op executions).  Kernel sites absent here
+            are priced at ``flops_per_chip``.
     """
 
     flops_per_chip: float = 197e12      # bf16 peak
@@ -73,19 +79,22 @@ class HardwareSpec:
     mem_penalty_scale: float = 10.0     # paper's constant C
     coll_latency: float = 0.0           # s per collective per axis
     axis_bw: tuple[tuple[str, float], ...] = ()
+    kernel_rates: tuple[tuple[str, float], ...] = ()
 
     def __post_init__(self) -> None:
-        """Normalize ``axis_bw`` spellings (dict / lists) to sorted tuples."""
-        bw = self.axis_bw
-        if isinstance(bw, dict):
-            bw = bw.items()
-        norm = tuple(sorted((str(a), float(b)) for a, b in bw))
-        object.__setattr__(self, "axis_bw", norm)
+        """Normalize ``axis_bw`` / ``kernel_rates`` spellings to tuples."""
+        for field in ("axis_bw", "kernel_rates"):
+            val = getattr(self, field)
+            if isinstance(val, dict):
+                val = val.items()
+            norm = tuple(sorted((str(a), float(b)) for a, b in val))
+            object.__setattr__(self, field, norm)
 
     def as_dict(self) -> dict:
         """JSON-serializable dict (inverse of :meth:`from_dict`)."""
         d = dataclasses.asdict(self)
         d["axis_bw"] = [[a, b] for a, b in self.axis_bw]
+        d["kernel_rates"] = [[k, r] for k, r in self.kernel_rates]
         return d
 
     @classmethod
@@ -101,8 +110,9 @@ class HardwareSpec:
         """
         names = {f.name for f in dataclasses.fields(cls)}
         kw = {k: v for k, v in d.items() if k in names}
-        if "axis_bw" in kw and kw["axis_bw"] is not None:
-            kw["axis_bw"] = tuple((a, float(b)) for a, b in kw["axis_bw"])
+        for field in ("axis_bw", "kernel_rates"):
+            if kw.get(field) is not None:
+                kw[field] = tuple((a, float(b)) for a, b in kw[field])
         return cls(**kw)
 
 
@@ -165,9 +175,16 @@ class MeshSpec:
 
 @dataclasses.dataclass(frozen=True)
 class ShardingState:
-    """Canonical, order-independent search state (paper §4.3)."""
+    """Canonical, order-independent search state (paper §4.3).
+
+    ``kernel_impls`` records the per-site fused-kernel implementation
+    decisions (op index -> impl name) — the extra decision dimension the
+    kernel-aware search explores jointly with sharding.  Sites without
+    an entry are priced and executed at their registry default impl.
+    """
     color_axes: tuple[tuple[int, tuple[str, ...]], ...] = ()
     bits: tuple[tuple[int, int], ...] = ()           # (supergroup, bit)
+    kernel_impls: tuple[tuple[int, str], ...] = ()   # (op index, impl)
 
     def as_dicts(self):
         return dict(self.color_axes), dict(self.bits)
@@ -179,7 +196,15 @@ class ShardingState:
         for sg, b in bit_choices:
             bits.setdefault(sg, b)
         return ShardingState(tuple(sorted(ca.items())),
-                             tuple(sorted(bits.items())))
+                             tuple(sorted(bits.items())),
+                             self.kernel_impls)
+
+    def with_kernel_impl(self, op_idx: int, impl: str) -> "ShardingState":
+        """This state plus one fused-site implementation decision."""
+        ki = dict(self.kernel_impls)
+        ki[op_idx] = impl
+        return ShardingState(self.color_axes, self.bits,
+                             tuple(sorted(ki.items())))
 
     @property
     def used_axes(self) -> set[str]:
@@ -213,7 +238,7 @@ _STATIC_TABLE_ATTRS = (
     "_op_specs", "_color_ops", "_group_ops", "_sg_groups",
     "_live_vids", "_vid_slot", "_live_start", "_live_end",
     "_val_info", "_color_vals", "_group_vals",
-    "_base_val_bytes", "_base_delta", "_base_peak")
+    "_base_val_bytes", "_base_delta", "_base_peak", "_kernel_specs")
 
 # a cost row is (compute_time, memory_time, collective_time, flops,
 # comm_bytes) — the per-op contribution to the breakdown totals.
@@ -246,6 +271,7 @@ class CostModel:
         self._suppressed_cache: dict[tuple, frozenset] = {}
         self._axis_size = dict(zip(mesh.axes, mesh.sizes))
         self._axis_bw_map = dict(hw.axis_bw)
+        self._kernel_rates_map = dict(hw.kernel_rates)
         # optional per-axis collective recorder (see state_features)
         self._tally: dict | None = None
         # site -> (colors, groups, sizes) memo: def sites are looked up
@@ -283,6 +309,7 @@ class CostModel:
         cm._info_cache = self._info_cache               # analysis-only
         cm._axis_size = self._axis_size
         cm._axis_bw_map = dict(hw.axis_bw)
+        cm._kernel_rates_map = dict(hw.kernel_rates)
         cm._tally = None
         # hardware-independent static tables, shared read-only
         for name in _STATIC_TABLE_ATTRS:
@@ -322,6 +349,7 @@ class CostModel:
         cm._info_cache = self._info_cache               # analysis-only
         cm._axis_size = dict(zip(mesh.axes, mesh.sizes))
         cm._axis_bw_map = dict(self.hw.axis_bw)
+        cm._kernel_rates_map = dict(self.hw.kernel_rates)
         cm._tally = None
         for name in _STATIC_TABLE_ATTRS:
             setattr(cm, name, getattr(self, name))
@@ -399,6 +427,12 @@ class CostModel:
                     group_ops[g].add(op_idx)
         self._color_ops = {c: frozenset(s) for c, s in color_ops.items()}
         self._group_ops = {g: frozenset(s) for g, s in group_ops.items()}
+
+        # fused kernel sites: op index -> registry spec (priced by the
+        # per-kernel roofline in _kernel_row instead of the generic one)
+        self._kernel_specs = {
+            i: spec for i, op in enumerate(prog.ops)
+            if (spec := kernel_registry.spec_for_prim(op.prim)) is not None}
 
         # supergroup index -> groups whose suppression its bit can flip
         self._sg_groups: list[frozenset[int]] = []
@@ -588,14 +622,20 @@ class CostModel:
             memo[key] = hit
         return hit
 
-    def op_cost_row(self, op_idx: int, color_axes: dict, suppressed
+    def op_cost_row(self, op_idx: int, color_axes: dict, suppressed,
+                    kernel_impls: dict | None = None
                     ) -> tuple[float, float, float, float, float]:
         """Contribution of one op to the breakdown totals under a sharding:
         (compute_time, memory_time, collective_time, flops, comm_bytes)."""
-        return self._op_row(op_idx, color_axes, suppressed, {})
+        return self._op_row(op_idx, color_axes, suppressed, {}, kernel_impls)
 
     def _op_row(self, op_idx: int, color_axes: dict, suppressed,
-                memo: dict) -> tuple[float, float, float, float, float]:
+                memo: dict, kernel_impls: dict | None = None
+                ) -> tuple[float, float, float, float, float]:
+        kspec = self._kernel_specs.get(op_idx)
+        if kspec is not None:
+            return self._kernel_row(op_idx, kspec, color_axes, suppressed,
+                                    memo, kernel_impls)
         op, trip, uses, reshard, outs, opnb, resnb = self._op_specs[op_idx]
         # resolve every site first (shared memo); ops all of whose sites
         # resolve to no axes cost exactly their unsharded base row
@@ -650,6 +690,98 @@ class CostModel:
         return (max(t_comp, t_mem) * trip, t_mem * trip, coll,
                 flops * trip, comm)
 
+    def _kernel_rate(self, kernel: str, impl: str) -> float:
+        """Effective FLOP/s for one fused kernel implementation.
+
+        Calibrated rates (``HardwareSpec.kernel_rates``, fit by
+        ``measure.calibrate_kernels``) take precedence; uncalibrated
+        sites price at the chip's peak like every other op.
+        """
+        return self._kernel_rates_map.get(f"{kernel}:{impl}",
+                                          self.hw.flops_per_chip)
+
+    def _kernel_row(self, op_idx: int, spec, color_axes: dict, suppressed,
+                    memo: dict, kernel_impls: dict | None
+                    ) -> tuple[float, float, float, float, float]:
+        """Cost row of one fused kernel site (per-kernel roofline).
+
+        FLOPs and HBM bytes come from the registry's per-impl formulas
+        over the *local* role sizes: mesh axes on mappable roles divide
+        the role (the site lowers to a ``shard_map`` over them); axes on
+        blocked roles cannot enter the kernel, so the executor gathers
+        those operands first — priced here as an all_gather and a
+        full-size role.  A Pallas choice whose local shapes cannot tile
+        (``registry.MIN_BLOCK``) is priced as the reference impl, exactly
+        mirroring the execution-side fallback in ``kernels.ops``.
+        """
+        op, trip, uses, reshard, outs, opnb, resnb = self._op_specs[op_idx]
+        impl = (kernel_impls or {}).get(op_idx, spec.default_impl)
+        sharded = False
+        use_axes: list = []
+        def_axes: list = []
+        for slot in range(len(op.operands)):
+            uinfo = uses[slot]
+            if uinfo is None:
+                use_axes.append(())
+                def_axes.append(None)
+                continue
+            ua = self._resolve(uinfo, color_axes, suppressed, memo)
+            use_axes.append(ua)
+            sharded = sharded or any(ua)
+            dinfo = reshard[slot]
+            if dinfo is None:
+                def_axes.append(None)
+            else:
+                da = self._resolve(dinfo, color_axes, suppressed, memo)
+                def_axes.append(da)
+                sharded = sharded or any(da)
+        base = getattr(self, "base_rows", None)
+        if not sharded and impl == spec.default_impl and base is not None:
+            return base[op_idx]
+        coll = 0.0
+        comm = 0.0
+        for slot, vid in enumerate(op.operands):
+            da = def_axes[slot]
+            if da is None:
+                continue
+            t, b = self._reshard_cost(vid, da, use_axes[slot], trip)
+            coll += t
+            comm += b
+        # local role sizes + blocked-role gathers
+        dims: dict = {}
+        for slot, (roles, vid) in enumerate(zip(spec.operand_roles,
+                                                op.operands)):
+            shape = self.prog.types[vid].shape
+            ua = use_axes[slot]
+            blocked_axes: list[str] = []
+            map_factor = 1
+            for d, role in enumerate(roles):
+                axes = ua[d] if d < len(ua) else ()
+                f = 1
+                for a in axes:
+                    f *= self._axis_size[a]
+                if role in spec.blocked and axes:
+                    blocked_axes.extend(axes)
+                    dims.setdefault(role, int(shape[d]))
+                else:
+                    map_factor *= f
+                    dims.setdefault(role, int(shape[d]) // f)
+            if blocked_axes:
+                within = opnb[slot] / map_factor
+                coll += self._collective("all_gather", within,
+                                         blocked_axes, trip)
+                comm += within * trip
+        if impl == "pallas" and not spec.feasible("pallas", dims):
+            impl = "ref"
+        t0 = self.prog.types[op.operands[0]]
+        db = t0.nbytes // max(t0.size, 1)
+        flops = spec.flops(dims, op.params)
+        bytes_moved = spec.bytes_moved(impl, dims, op.params, db)
+        t_comp = flops / self._kernel_rate(spec.name, impl)
+        t_mem = bytes_moved / self.hw.hbm_bw
+        return (max(t_comp, t_mem) * trip, t_mem * trip, coll,
+                flops * trip, comm)
+
     def value_local_bytes(self, vid: int, color_axes: dict,
                           suppressed) -> float:
         return self._value_bytes(vid, color_axes, suppressed, {})
@@ -662,7 +794,8 @@ class CostModel:
         axes = self._resolve(info, color_axes, suppressed, memo)
         return self.prog.types[vid].nbytes / self._factor(axes)
 
-    def recost(self, op_indices, vids, color_axes: dict, suppressed
+    def recost(self, op_indices, vids, color_axes: dict, suppressed,
+               kernel_impls: dict | None = None
                ) -> tuple[dict[int, tuple], dict[int, float]]:
         """Batched re-costing of dirty ops and values under one sharding.
 
@@ -678,13 +811,16 @@ class CostModel:
             vids: value ids to re-measure local bytes for.
             color_axes: color -> mesh-axes assignment of the state.
             suppressed: suppressed group set (``suppressed_for``).
+            kernel_impls: op index -> fused-kernel impl decisions of the
+                state (``None`` = registry defaults everywhere).
 
         Returns:
             ``({op_idx: cost row}, {vid: local bytes})`` over exactly the
             requested indices (rows equal to base are *not* filtered).
         """
         memo: dict = {}
-        rows = {i: self._op_row(i, color_axes, suppressed, memo)
+        rows = {i: self._op_row(i, color_axes, suppressed, memo,
+                                kernel_impls)
                 for i in op_indices}
         vbytes = {v: self._value_bytes(v, color_axes, suppressed, memo)
                   for v in vids}
@@ -726,8 +862,11 @@ class CostModel:
     def state_dirty_sets(self, state: ShardingState):
         """Dirty sets of a whole state relative to the unsharded base.
         Bits still at their default (0) change nothing vs. base."""
-        return self.dirty_sets((c for c, _ in state.color_axes),
-                               (sg for sg, b in state.bits if b))
+        ops, vals = self.dirty_sets((c for c, _ in state.color_axes),
+                                    (sg for sg, b in state.bits if b))
+        if state.kernel_impls:
+            ops = frozenset(ops | {i for i, _ in state.kernel_impls})
+        return ops, vals
 
     # -- evaluation ----------------------------------------------------------
 
@@ -749,7 +888,8 @@ class CostModel:
         dirty_ops, dirty_vals = self.state_dirty_sets(state)
         totals = list(self._base_totals)
         new_rows, new_vbytes = self.recost(dirty_ops, dirty_vals,
-                                           color_axes, suppressed)
+                                           color_axes, suppressed,
+                                           dict(state.kernel_impls))
         rows: dict[int, tuple] = {}
         for i, new in new_rows.items():
             old = self.base_rows[i]
@@ -775,6 +915,7 @@ class CostModel:
         Deliberately uncached."""
         color_axes, bits = state.as_dicts()
         _, suppressed = self._chosen_suppressed(bits)
+        kernel_impls = dict(state.kernel_impls)
         bd = CostBreakdown()
         live: dict[int, float] = {}
 
@@ -790,6 +931,27 @@ class CostModel:
 
         for op_idx, op in enumerate(self.prog.ops):
             trip = self.prog.trip_counts.get(op_idx, 1)
+            if op_idx in self._kernel_specs:
+                # fused kernel site: per-kernel roofline (shared with the
+                # sparse path), then the generic live-range update
+                row = self._kernel_row(op_idx, self._kernel_specs[op_idx],
+                                       color_axes, suppressed, {},
+                                       kernel_impls)
+                bd.compute_time += row[0]
+                bd.memory_time += row[1]
+                bd.collective_time += row[2]
+                bd.flops += row[3]
+                bd.comm_bytes += row[4]
+                for r in op.results:
+                    rsite = self.nda.def_site[r]
+                    live[r] = local_bytes(
+                        r, self.site_axes(rsite, color_axes, suppressed))
+                peak = max(peak, sum(live.values()))
+                for vid in op.operands:
+                    if self.last_use.get(vid) == op_idx and \
+                            vid not in self.prog.outputs:
+                        live.pop(vid, None)
+                continue
             use_axes = []
             # 1. resharding between def and use
             for slot, vid in enumerate(op.operands):

@@ -205,11 +205,16 @@ class IncrementalEvaluator:
         cm = self.cm
         # dirty sets: the action's color, plus supergroups whose bit this
         # action newly sets to 1 (a bit still at the default 0 — or one the
-        # parent already fixed — changes nothing).
-        parent_bits = dict(parent.bits)
-        new_sgs = [sg for sg, b in action.bit_choices
-                   if b and sg not in parent_bits]
-        dirty_ops, dirty_vals = cm.dirty_sets((action.color,), new_sgs)
+        # parent already fixed — changes nothing).  A kernel-impl action
+        # dirties exactly its one fused site (no value bytes change).
+        if action.kernel_op >= 0:
+            dirty_ops = frozenset((action.kernel_op,))
+            dirty_vals: frozenset = frozenset()
+        else:
+            parent_bits = dict(parent.bits)
+            new_sgs = [sg for sg, b in action.bit_choices
+                       if b and sg not in parent_bits]
+            dirty_ops, dirty_vals = cm.dirty_sets((action.color,), new_sgs)
         color_axes, _ = state.as_dicts()
         suppressed = cm.suppressed_for(state.bits)
 
@@ -217,7 +222,8 @@ class IncrementalEvaluator:
         totals = [pbd.compute_time, pbd.memory_time, pbd.collective_time,
                   pbd.flops, pbd.comm_bytes]
         new_rows, new_vbytes = cm.recost(dirty_ops, dirty_vals,
-                                         color_axes, suppressed)
+                                         color_axes, suppressed,
+                                         dict(state.kernel_impls))
         rows = dict(prec.rows)
         base_rows = cm.base_rows
         for i, new in new_rows.items():

@@ -19,6 +19,8 @@ import jax
 import numpy as np
 from jax.extend import core as jcore
 
+from repro.kernels import registry as kernel_registry
+
 
 @dataclasses.dataclass(frozen=True)
 class TensorType:
@@ -100,6 +102,53 @@ def _sub_jaxpr(prim_name: str, params: dict):
     return None
 
 
+# jits with this name prefix (``repro.kernels.ops``) are fused kernel
+# sites: the extractor records them as single ``kernel:<name>`` ops
+# instead of inlining the Pallas/reference internals.
+_KERNEL_JIT_PREFIX = "toast_kernel__"
+
+
+def _kernel_eqn_info(eqn):
+    """``(prim, params, n_operands)`` for a fused-kernel jit eqn, else ``None``.
+
+    The jit name encodes the kernel id plus its static configuration:
+    ``toast_kernel__flash_attention__causal=1``.  The registry contract
+    is checked so anything unexpected falls back to ordinary inlining
+    rather than producing a malformed fused op: results must match the
+    registry arity exactly, operands must be at least it — grad-time
+    partial evaluation *appends* hoisted loop-invariant values to a
+    pjit's invars (and can emit constant-only pjits reusing the name),
+    so the real operands are the leading ``n_operands`` invars, which
+    must also have the registry ranks.  Implementation
+    choice (pallas vs ref) is deliberately *not* part of the name — the
+    traced program, and hence the fingerprint, is impl-independent.
+    """
+    if eqn.primitive.name != "pjit":
+        return None
+    name = eqn.params.get("name", "")
+    if not isinstance(name, str) or not name.startswith(_KERNEL_JIT_PREFIX):
+        return None
+    parts = name[len(_KERNEL_JIT_PREFIX):].split("__")
+    spec = kernel_registry.KERNELS.get(parts[0])
+    if spec is None or len(eqn.invars) < len(spec.operand_roles) or \
+            len(eqn.outvars) != len(spec.result_roles):
+        return None
+    for var, roles in zip(eqn.invars, spec.operand_roles):
+        if len(getattr(var.aval, "shape", ())) != len(roles):
+            return None
+    params: dict = {"kernel": spec.name}
+    for kv in parts[1:]:
+        if "=" not in kv:
+            continue
+        k, v = kv.split("=", 1)
+        try:
+            v = int(v)
+        except ValueError:
+            pass
+        params[k] = bool(v) if k == "causal" else v
+    return spec.prim, params, len(spec.operand_roles)
+
+
 class _Extractor:
     def __init__(self) -> None:
         self.prog = Program()
@@ -137,6 +186,17 @@ class _Extractor:
         name = eqn.primitive.name
         if name in _CALL_PRIMS or _sub_jaxpr(name, eqn.params) is not None and \
                 name not in ("scan", "while", "cond"):
+            kernel = _kernel_eqn_info(eqn)
+            if kernel is not None:
+                # fused kernel site: one op, internals never inlined
+                # (trailing invars beyond the registry arity are values
+                # hoisted by partial eval — not operands)
+                prim, kparams, n_operands = kernel
+                in_ids = [self.value_for(a, env)
+                          for a in eqn.invars[:n_operands]]
+                out_ids = [self.bind_var(v, env) for v in eqn.outvars]
+                self.prog.add_op(Op(prim, kparams, in_ids, out_ids), trip)
+                return
             sub = _sub_jaxpr(name, eqn.params)
             if sub is not None:
                 closed = sub if hasattr(sub, "jaxpr") else None

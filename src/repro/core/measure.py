@@ -315,6 +315,46 @@ def fit_hardware(cells: list[dict], hw0: HardwareSpec,
     )
 
 
+def calibrate_kernels(samples: list[dict],
+                      hw0: HardwareSpec) -> HardwareSpec:
+    """Fit per-(kernel, impl) effective FLOP rates from measured runs.
+
+    The generic roofline prices every op at the chip's peak FLOP/s; real
+    fused kernels achieve an implementation-specific fraction of it (the
+    reference attention materializes scores, the Pallas kernel streams
+    them).  This fit gives each ``"<kernel>:<impl>"`` pair the geometric
+    mean of ``model_flops / measured_s`` over its samples — the rate
+    ``CostModel._kernel_rate`` then prices that site with, replacing
+    ``flops_per_chip``.  Kernels without samples keep pricing at peak.
+
+    Args:
+        samples: ``[{"kernel": str, "impl": str, "flops": float,
+            "measured_s": float}, ...]`` — one entry per timed kernel
+            execution (registry-model FLOPs for the executed shape).
+            Non-positive times or FLOPs are skipped.
+        hw0: the spec to extend; every non-kernel field carries over,
+            and existing ``kernel_rates`` entries are replaced only for
+            pairs that have samples.
+
+    Returns:
+        ``hw0`` with calibrated ``kernel_rates``.
+    """
+    logs: dict[str, list[float]] = {}
+    for s in samples:
+        flops, t = float(s.get("flops", 0.0)), float(s.get("measured_s",
+                                                           0.0))
+        if flops <= 0.0 or t <= 0.0:
+            continue
+        logs.setdefault(f"{s['kernel']}:{s['impl']}", []).append(
+            math.log(flops / t))
+    rates = dict(hw0.kernel_rates)
+    for key, ls in logs.items():
+        rates[key] = float(np.clip(math.exp(np.mean(ls)),
+                                   _COEF_MIN, _COEF_MAX))
+    return dataclasses.replace(hw0,
+                               kernel_rates=tuple(sorted(rates.items())))
+
+
 def mean_relative_error(pred, meas) -> float:
     """Mean of ``|pred - meas| / meas`` over paired samples.
 

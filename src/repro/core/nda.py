@@ -23,6 +23,7 @@ import math
 import numpy as np
 
 from repro.core.ir import Op, Program
+from repro.kernels import registry as kernel_registry
 
 
 class UnionFind:
@@ -410,6 +411,29 @@ def _rule_split(res: NDAResult, op: Op, use, dfs) -> None:
                 res.unify(r[i], use[0][i])
 
 
+def _rule_kernel(res: NDAResult, op: Op, use, dfs) -> None:
+    """Fused kernel sites: unify all dims sharing a registry role name.
+
+    The registry (``repro.kernels.registry``) assigns every operand and
+    result dim of a fused op a role (``batch``, ``heads``, ``q_seq``,
+    ...); equal roles must shard identically, so their name nodes join
+    one color.  This is the whole sharding contract of the kernel — the
+    internals are never inlined, and blocked roles are kept out of the
+    action space by ``core.actions``.
+    """
+    spec = kernel_registry.spec_for_prim(op.prim)
+    if spec is None:
+        return
+    rep: dict[str, int] = {}
+    for roles, dims in list(zip(spec.operand_roles, use)) + \
+            list(zip(spec.result_roles, dfs)):
+        for role, node in zip(roles, dims):
+            if role in rep:
+                res.unify(rep[role], node)
+            else:
+                rep[role] = node
+
+
 _STRUCTURAL_RULES = {
     "dot_general": _rule_dot_general,
     "transpose": _rule_transpose,
@@ -439,6 +463,8 @@ for p in _REDUCE_PRIMS:
     _STRUCTURAL_RULES[p] = _rule_reduce
 for p in _CUM_PRIMS:
     _STRUCTURAL_RULES[p] = _rule_cum
+for _spec in kernel_registry.KERNELS.values():
+    _STRUCTURAL_RULES[_spec.prim] = _rule_kernel
 
 
 def _rule_default(res: NDAResult, op: Op, use, dfs) -> None:

@@ -114,6 +114,15 @@ class ShardingPlan:
         logical_axes: the flattened per-input logical dim names the plan
             was searched with (``None`` when the request declared none);
             lets :meth:`check` resolve logical-name constraint targets.
+        kernel_sites: one record per fused kernel site in the traced
+            program (``kernel:*`` ops with a dispatch entry point), in
+            call order: ``{"site": "<kernel>:<ordinal>", "op": op_idx,
+            "kernel": name, "impl": decided impl, "sharded": bool,
+            "in_specs": [PartitionSpec, ...], "out_specs": [...]}``.
+            :meth:`apply` installs these through the models' kernel
+            dispatch so sharded sites lower via ``shard_map`` with the
+            plan's specs (docs/kernels.md).  Empty for programs traced
+            without ``use_pallas``.
     """
 
     mesh: MeshSpec
@@ -137,6 +146,7 @@ class ShardingPlan:
     cached: bool = False
     out_specs: list[PartitionSpec] = dataclasses.field(default_factory=list)
     logical_axes: list[tuple[str, ...] | None] | None = None
+    kernel_sites: list[dict] = dataclasses.field(default_factory=list)
 
     def jax_in_shardings(self, mesh: jax.sharding.Mesh, treedef=None):
         """Materialize ``in_specs`` as ``NamedSharding``s on ``mesh``.
@@ -299,7 +309,9 @@ class ShardingPlan:
             "input_paths": self.input_paths,
             "state": {"color_axes": [[c, list(axes)] for c, axes in
                                      self.state.color_axes],
-                      "bits": [list(b) for b in self.state.bits]},
+                      "bits": [list(b) for b in self.state.bits],
+                      "kernel_impls": [[i, impl] for i, impl in
+                                       self.state.kernel_impls]},
             "cost": self.cost,
             "breakdown": self.breakdown,
             "baseline_breakdown": self.baseline_breakdown,
@@ -320,6 +332,14 @@ class ShardingPlan:
             "logical_axes": (None if self.logical_axes is None else
                              [list(t) if t is not None else None
                               for t in self.logical_axes]),
+            "kernel_sites": [
+                {"site": r["site"], "op": r["op"], "kernel": r["kernel"],
+                 "impl": r["impl"], "sharded": r["sharded"],
+                 "in_specs": [list(map(_spec_entry, s))
+                              for s in r["in_specs"]],
+                 "out_specs": [list(map(_spec_entry, s))
+                               for s in r["out_specs"]]}
+                for r in self.kernel_sites],
             "schema": 2,
         }
 
@@ -348,7 +368,9 @@ class ShardingPlan:
             state=ShardingState(
                 tuple((int(c), tuple(axes))
                       for c, axes in state_d["color_axes"]),
-                tuple((int(sg), int(b)) for sg, b in state_d["bits"])),
+                tuple((int(sg), int(b)) for sg, b in state_d["bits"]),
+                tuple((int(i), str(impl)) for i, impl in
+                      state_d.get("kernel_impls", []))),
             cost=d["cost"],
             breakdown=dict(d["breakdown"]),
             baseline_breakdown=dict(d["baseline_breakdown"]),
@@ -371,6 +393,15 @@ class ShardingPlan:
             logical_axes=(None if d.get("logical_axes") is None else
                           [tuple(t) if t is not None else None
                            for t in d["logical_axes"]]),
+            kernel_sites=[
+                {"site": r["site"], "op": int(r["op"]),
+                 "kernel": r["kernel"], "impl": r["impl"],
+                 "sharded": bool(r["sharded"]),
+                 "in_specs": [_spec_from_entries(s)
+                              for s in r["in_specs"]],
+                 "out_specs": [_spec_from_entries(s)
+                               for s in r["out_specs"]]}
+                for r in d.get("kernel_sites", [])],
         )
 
     @classmethod
@@ -396,6 +427,12 @@ class AppliedPlan:
     (treedef, shape/dtype struct) — treedef alone is not enough, since
     the output structure (and hence ``out_shardings``) can depend on the
     input shapes — so steady-state calls pay one dict lookup.
+
+    Plans carrying ``kernel_sites`` additionally trace ``fn`` under a
+    kernel-dispatch context: each fused site executes the plan's chosen
+    implementation, and sharded sites lower through ``shard_map`` with
+    the plan's per-site specs (mappable roles only — blocked roles stay
+    whole per device; see docs/kernels.md).
     """
 
     def __init__(self, plan: "ShardingPlan", fn: Callable,
@@ -413,6 +450,29 @@ class AppliedPlan:
         self.mesh = mesh
         self._jit_kwargs = dict(jit_kwargs)
         self._cache: dict = {}
+        self._traced_fn = self._with_kernel_dispatch(fn)
+
+    def _with_kernel_dispatch(self, fn: Callable) -> Callable:
+        """Wrap ``fn`` so jit-tracing runs under the plan's kernel
+        dispatch (site ordinals align with the trace because the model
+        code runs identically here and in ``extract_program``)."""
+        sites = self.plan.kernel_sites
+        if not sites:
+            return fn
+        from repro.models.sharding import KernelDispatch, kernel_dispatch
+        disp = KernelDispatch(
+            impls={r["site"]: r["impl"] for r in sites},
+            mesh=self.mesh,
+            specs={r["site"]: (tuple(r["in_specs"]),
+                               r["out_specs"][0]
+                               if len(r["out_specs"]) == 1
+                               else tuple(r["out_specs"]))
+                   for r in sites if r["sharded"]})
+
+        def dispatched(*a, **kw):
+            with kernel_dispatch(disp):
+                return fn(*a, **kw)
+        return dispatched
 
     @staticmethod
     def _leaf_aval(x) -> tuple:
@@ -446,7 +506,7 @@ class AppliedPlan:
                        for s in self.plan.in_specs])
         out_sh = None
         if self.plan.out_specs:
-            out_shape = jax.eval_shape(self.fn, *args)
+            out_shape = jax.eval_shape(self._traced_fn, *args)
             out_def = jax.tree_util.tree_structure(out_shape)
             if out_def.num_leaves != len(self.plan.out_specs):
                 raise ValueError(
@@ -455,8 +515,8 @@ class AppliedPlan:
             out_sh = jax.tree_util.tree_unflatten(
                 out_def, [NamedSharding(self.mesh, s)
                           for s in self.plan.out_specs])
-        jitted = jax.jit(self.fn, in_shardings=in_sh, out_shardings=out_sh,
-                         **self._jit_kwargs)
+        jitted = jax.jit(self._traced_fn, in_shardings=in_sh,
+                         out_shardings=out_sh, **self._jit_kwargs)
         self._cache[key] = jitted
         return jitted
 
@@ -553,6 +613,67 @@ def _state_specs(cm: CostModel, state: ShardingState,
             (a[0] if len(a) == 1 else tuple(a)) if a else None
             for a in axes]))
     return specs
+
+
+def kernel_site_records(cm: CostModel,
+                        state: ShardingState) -> list[dict]:
+    """Project a search state onto per-site fused-kernel records.
+
+    One record per dispatch-site kernel op (backward kernels execute
+    inside the forward site's ``custom_vjp`` and get none), in program
+    order — which is call order, so the ``"<kernel>:<ordinal>"`` site
+    keys line up with the execution-time dispatch counters.  Specs cover
+    **mappable** roles only: blocked roles are never sharded inside the
+    kernel, so ``shard_map`` receives them whole (GSPMD inserts the
+    gather the cost model priced).
+
+    Args:
+        cm: the cost model built for the plan's mesh.
+        state: the final search state.
+
+    Returns:
+        ``ShardingPlan.kernel_sites``-shaped records (see its docstring).
+    """
+    from repro.kernels import registry as kernel_registry
+    color_axes, bits = state.as_dicts()
+    _, suppressed = cm._chosen_suppressed(bits)
+    impls = dict(state.kernel_impls)
+    counters: Counter = Counter()
+    records: list[dict] = []
+
+    def _project(roles, vid, mappable):
+        axes = cm.site_axes(cm.nda.def_site[vid], color_axes, suppressed)
+        entries, sharded = [], False
+        for role, a in zip(roles, axes):
+            if role in mappable and a:
+                entries.append(a[0] if len(a) == 1 else tuple(a))
+                sharded = True
+            else:
+                entries.append(None)
+        return PartitionSpec(*entries), sharded
+
+    for op_idx, op in enumerate(cm.prog.ops):
+        spec = kernel_registry.spec_for_prim(op.prim)
+        if spec is None or not spec.dispatch_site:
+            continue
+        ordinal = counters[spec.name]
+        counters[spec.name] += 1
+        in_specs, out_specs, sharded = [], [], False
+        for roles, vid in zip(spec.operand_roles, op.operands):
+            ps, sh = _project(roles, vid, spec.mappable)
+            in_specs.append(ps)
+            sharded = sharded or sh
+        for roles, vid in zip(spec.result_roles, op.results):
+            ps, sh = _project(roles, vid, spec.mappable)
+            out_specs.append(ps)
+            sharded = sharded or sh
+        records.append({
+            "site": f"{spec.name}:{ordinal}", "op": op_idx,
+            "kernel": spec.name,
+            "impl": impls.get(op_idx, spec.default_impl),
+            "sharded": sharded,
+            "in_specs": in_specs, "out_specs": out_specs})
+    return records
 
 
 def _constraint_specs(cm: CostModel, state: ShardingState,

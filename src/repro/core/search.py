@@ -115,6 +115,9 @@ def recover_actions(state: ShardingState) -> list[Action]:
         for axis in axes:
             out.append(Action(color, axis, bit_items if first else ()))
             first = False
+    for op_idx, impl in state.kernel_impls:
+        out.append(Action(color=-1, axis="", bit_choices=(),
+                          kernel_op=op_idx, kernel_impl=impl))
     return out
 
 

@@ -47,6 +47,7 @@ import math
 from repro.core.conflicts import ConflictAnalysis
 from repro.core.constraints import ConstraintSet, _norm_entry, check_plan
 from repro.core.cost_model import CostModel, ShardingState
+from repro.kernels import registry as kernel_registry
 
 # severity levels, most severe first (report tables sort by this order)
 SEVERITIES = ("error", "warning", "info")
@@ -372,6 +373,39 @@ def _contract_dims(op) -> tuple[int, ...]:
     return ()
 
 
+def _kernel_blocked_gathers(op_idx, op, spec, use_axes, prog, axis_size,
+                            trip) -> list[PredictedCollective]:
+    """Blocked-role gathers a fused kernel site implies, per operand.
+
+    Mirrors ``CostModel._kernel_row``'s convention: mesh axes landing on
+    an operand's *blocked* roles cannot enter the kernel, so the operand
+    is all-gathered over them first, sized at the mappable-local buffer
+    (full on blocked dims, divided on every other sharded dim).  Fused
+    sites add no contraction all-reduce — the softmax/recurrence
+    reductions happen inside the kernel.
+    """
+    out: list[PredictedCollective] = []
+    for slot, (roles, vid) in enumerate(zip(spec.operand_roles,
+                                            op.operands)):
+        ua = use_axes[slot] if slot < len(use_axes) else ()
+        blocked_axes: list[str] = []
+        map_factor = 1
+        for d, role in enumerate(roles):
+            axes = ua[d] if d < len(ua) else ()
+            if role in spec.blocked and axes:
+                blocked_axes.extend(axes)
+            else:
+                for a in axes:
+                    map_factor *= axis_size[a]
+        if blocked_axes:
+            within = prog.types[vid].nbytes / map_factor
+            out.append(PredictedCollective(
+                "all_gather", op_idx, op.prim, vid,
+                tuple(blocked_axes), trip,
+                comm_bytes=within * trip, result_bytes=within))
+    return out
+
+
 def predicted_collectives(cm: CostModel, state: ShardingState,
                           resolver: StateResolver | None = None
                           ) -> list[PredictedCollective]:
@@ -405,12 +439,16 @@ def predicted_collectives(cm: CostModel, state: ShardingState,
 
     for op_idx, op in enumerate(prog.ops):
         trip = prog.trip_counts.get(op_idx, 1)
+        kspec = kernel_registry.spec_for_prim(op.prim)
         first_use: list[tuple[str, ...]] | None = None
+        all_use: list = []
         for slot, vid in enumerate(op.operands):
             usite = use_index.get((op_idx, slot))
             if usite is None:
+                all_use.append(())
                 continue
             ua = res.dims(usite)
+            all_use.append(ua)
             if slot == 0:
                 first_use = ua
             dsite = nda.def_site.get(vid)
@@ -440,6 +478,13 @@ def predicted_collectives(cm: CostModel, state: ShardingState,
                 out.append(PredictedCollective(
                     "all_gather", op_idx, op.prim, vid, remaining, trip,
                     comm_bytes=within * trip, result_bytes=within))
+
+        # fused kernel sites: blocked-role gathers instead of any
+        # contraction all-reduce (reductions happen inside the kernel)
+        if kspec is not None:
+            out.extend(_kernel_blocked_gathers(
+                op_idx, op, kspec, all_use, prog, axis_size, trip))
+            continue
 
         # partial-result all-reduce when contracting dims are sharded
         contract_axes: list[str] = []
@@ -697,7 +742,7 @@ def verify_state(cm: CostModel, state: ShardingState, *, plan=None,
         color_axes, _ = state.as_dicts()
         suppressed = cm.suppressed_for(state.bits)
         rows, _ = cm.recost(range(len(cm.prog.ops)), (), color_axes,
-                            suppressed)
+                            suppressed, dict(state.kernel_impls))
         mine: dict[int, float] = {}
         for p in report.predicted:
             mine[p.op] = mine.get(p.op, 0.0) + p.comm_bytes

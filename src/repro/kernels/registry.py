@@ -1,0 +1,282 @@
+"""Static metadata for every fused kernel the tracer can record.
+
+This module is the single source of truth for the *fused-op IR contract*
+(docs/kernels.md): which kernels exist, the dimension **roles** of their
+operands/results (how NDA colors propagate through the fused op), which
+roles a sharding may map over the mesh (``shard_map``-lowered) vs which
+are consumed *inside* the kernel and must never be sharded, the
+available implementations, and per-impl roofline formulas (FLOPs /
+HBM bytes) the cost model prices kernel sites with.
+
+Deliberately **pure python** — no jax imports — so ``core.nda``,
+``core.actions`` and ``core.cost_model`` can consume it without pulling
+accelerator code into the analysis layer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+__all__ = [
+    "KERNEL_PRIM_PREFIX", "KERNELS", "KernelSpec", "MIN_BLOCK",
+    "kernel_name", "pallas_feasible", "pick_block", "spec_for_prim",
+]
+
+# IR prims for fused kernel sites are f"{KERNEL_PRIM_PREFIX}{name}"
+KERNEL_PRIM_PREFIX = "kernel:"
+
+# smallest Pallas block worth launching: the f32 sublane tile.  Shapes
+# whose divisor-aligned block falls below this (primes, tiny remainders)
+# are priced and executed as the reference impl instead.
+MIN_BLOCK = 8
+
+
+def pick_block(n: int, target: int) -> int:
+    """Largest divisor of ``n`` that is ``<= target`` (pure helper).
+
+    Mirrors the block picking in ``kernels.ops`` so the cost model and
+    the execution dispatch agree on tiling without importing jax.
+    """
+    b = min(target, max(n, 1))
+    while n % b:
+        b -= 1
+    return max(b, 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """Contract of one fused kernel as seen by the analysis stack.
+
+    Attributes:
+        name: kernel id (``flash_attention``, ``rg_lru``, ...).
+        operand_roles: per-operand dim-role names; equal role names are
+            unified by the NDA (they must shard identically).
+        result_roles: per-result dim-role names, same role namespace.
+        mappable: roles a plan may shard — the site lowers to a
+            ``shard_map`` over exactly these roles' mesh axes.
+        blocked: roles consumed inside the kernel (contractions, the
+            scan axis, lane-aligned tiles); sharding them is excluded
+            from the action space while kernel sites are present.
+        impls: available implementations, preferred first.  Sites with
+            a single impl contribute no search decision.
+        block_roles: role -> target block size; Pallas is feasible only
+            when every such role's (local) size admits a divisor block
+            of at least ``MIN_BLOCK``.
+        dispatch_site: True for kernels called through a ``kernels.ops``
+            entry point (they allocate a per-trace dispatch site key);
+            False for backward kernels, which execute inside the entry
+            kernel's ``custom_vjp`` and inherit its site.
+    """
+
+    name: str
+    operand_roles: tuple[tuple[str, ...], ...]
+    result_roles: tuple[tuple[str, ...], ...]
+    mappable: frozenset
+    blocked: frozenset
+    impls: tuple[str, ...]
+    block_roles: tuple[tuple[str, int], ...] = ()
+    dispatch_site: bool = True
+
+    @property
+    def prim(self) -> str:
+        """The IR prim this kernel traces as (``kernel:<name>``)."""
+        return KERNEL_PRIM_PREFIX + self.name
+
+    @property
+    def default_impl(self) -> str:
+        """The impl assumed when a state records no explicit choice."""
+        return self.impls[0]
+
+    def dims_from_shapes(self, shapes) -> dict:
+        """Map role -> size from per-operand shapes (first occurrence).
+
+        Args:
+            shapes: one shape tuple per operand, model layout.
+
+        Returns:
+            ``{role: size}`` for every operand role.
+        """
+        dims: dict = {}
+        for roles, shape in zip(self.operand_roles, shapes):
+            for role, size in zip(roles, shape):
+                dims.setdefault(role, int(size))
+        return dims
+
+    def flops(self, dims: dict, params: dict) -> float:
+        """Model FLOPs of one call given role sizes ``dims``."""
+        return _FLOPS[self.name](dims, params)
+
+    def bytes_moved(self, impl: str, dims: dict, params: dict,
+                    dtype_bytes: int) -> float:
+        """Modelled HBM traffic of one call for implementation ``impl``."""
+        return _BYTES[self.name](impl, dims, params, dtype_bytes)
+
+    def feasible(self, impl: str, dims: dict) -> bool:
+        """Whether ``impl`` can run on role sizes ``dims``.
+
+        The reference impl always can; Pallas needs every blocked tile
+        dimension to admit a divisor block of at least ``MIN_BLOCK``.
+        """
+        if impl != "pallas":
+            return True
+        for role, target in self.block_roles:
+            n = dims.get(role)
+            if n is not None and pick_block(n, target) < MIN_BLOCK:
+                return False
+        return True
+
+
+# -- per-kernel roofline formulas -------------------------------------------
+#
+# dims use the role names of the specs below.  Formulas are intentionally
+# simple analytic models — ``fit_hardware`` calibrates an effective rate
+# per (kernel, impl) against measured execution on top of them.
+
+
+def _fa_flops(d, params):
+    # two matmuls (QK^T and PV) over the full score matrix; causal
+    # self-attention touches half the blocks
+    f = 4.0 * d["batch"] * d["heads"] * d["q_seq"] * d["kv_seq"] * \
+        d["head_dim"]
+    if params.get("causal") and d["q_seq"] == d["kv_seq"]:
+        f *= 0.5
+    return f
+
+
+def _fa_bytes(impl, d, params, db):
+    io = d["batch"] * d["heads"] * d["head_dim"] * \
+        (2.0 * d["q_seq"] + 2.0 * d["kv_seq"]) * db
+    if impl == "pallas":
+        # flash streaming: Q and O once; K/V re-read once per q-block
+        nq = max(1, -(-d["q_seq"] // pick_block(d["q_seq"], 128)))
+        return d["batch"] * d["heads"] * d["head_dim"] * db * (
+            2.0 * d["q_seq"] + 2.0 * d["kv_seq"] * nq)
+    # reference: materializes the f32 score matrix (write+read, twice —
+    # scores then softmax probabilities)
+    scores = 4.0 * d["batch"] * d["heads"] * d["q_seq"] * d["kv_seq"] * 4
+    return io + scores
+
+
+def _fa_bwd_flops(d, params):
+    # 5 matmuls in the attention backward vs 2 forward
+    return 2.5 * _fa_flops(d, params)
+
+
+def _fa_bwd_bytes(impl, d, params, db):
+    io = d["batch"] * d["heads"] * d["head_dim"] * \
+        (4.0 * d["q_seq"] + 4.0 * d["kv_seq"]) * db
+    scores = 8.0 * d["batch"] * d["heads"] * d["q_seq"] * d["kv_seq"] * 4
+    return io + scores
+
+
+def _lru_flops(d, params):
+    return 2.0 * d["batch"] * d["seq"] * d["channels"]
+
+
+def _lru_bytes(impl, d, params, db):
+    elems = d["batch"] * d["seq"] * d["channels"]
+    if impl == "pallas":
+        # single pass: read a, b; write h
+        return 3.0 * elems * db
+    # associative scan: log2(S) combine passes, each reading and
+    # writing both carry arrays
+    passes = max(1.0, math.ceil(math.log2(max(d["seq"], 2))))
+    return 4.0 * elems * db * passes
+
+
+def _lru_bwd_flops(d, params):
+    return 4.0 * d["batch"] * d["seq"] * d["channels"]
+
+
+def _lru_bwd_bytes(impl, d, params, db):
+    passes = max(1.0, math.ceil(math.log2(max(d["seq"], 2))))
+    return 6.0 * d["batch"] * d["seq"] * d["channels"] * db * passes
+
+
+_FLOPS = {
+    "flash_attention": _fa_flops,
+    "flash_attention_bwd": _fa_bwd_flops,
+    "rg_lru": _lru_flops,
+    "rg_lru_bwd": _lru_bwd_flops,
+}
+
+_BYTES = {
+    "flash_attention": _fa_bytes,
+    "flash_attention_bwd": _fa_bwd_bytes,
+    "rg_lru": _lru_bytes,
+    "rg_lru_bwd": _lru_bwd_bytes,
+}
+
+
+# -- the registry -----------------------------------------------------------
+
+_ATTN_Q = ("batch", "q_seq", "heads", "head_dim")
+_ATTN_KV = ("batch", "kv_seq", "heads", "head_dim")
+_LRU = ("batch", "seq", "channels")
+
+KERNELS: dict[str, KernelSpec] = {
+    "flash_attention": KernelSpec(
+        name="flash_attention",
+        # model layout, GQA already expanded by the layer: q (B,S,H,hd);
+        # k, v (B,T,H,hd) -> o (B,S,H,hd)
+        operand_roles=(_ATTN_Q, _ATTN_KV, _ATTN_KV),
+        result_roles=(_ATTN_Q,),
+        mappable=frozenset({"batch", "heads"}),
+        # kv_seq is the softmax contraction; q_seq tiles the grid with
+        # causal masking against absolute positions; head_dim feeds the
+        # MXU contraction — none survive sharding inside the kernel.
+        blocked=frozenset({"q_seq", "kv_seq", "head_dim"}),
+        impls=("pallas", "ref"),
+        block_roles=(("q_seq", 128), ("kv_seq", 128)),
+    ),
+    "flash_attention_bwd": KernelSpec(
+        name="flash_attention_bwd",
+        # (q, k, v, d_out) -> (dq, dk, dv)
+        operand_roles=(_ATTN_Q, _ATTN_KV, _ATTN_KV, _ATTN_Q),
+        result_roles=(_ATTN_Q, _ATTN_KV, _ATTN_KV),
+        mappable=frozenset({"batch", "heads"}),
+        blocked=frozenset({"q_seq", "kv_seq", "head_dim"}),
+        impls=("ref",),
+        dispatch_site=False,
+    ),
+    "rg_lru": KernelSpec(
+        name="rg_lru",
+        # h_t = a_t * h_{t-1} + b_t over (B, S, R)
+        operand_roles=(_LRU, _LRU),
+        result_roles=(_LRU,),
+        mappable=frozenset({"batch", "channels"}),
+        blocked=frozenset({"seq"}),
+        impls=("pallas", "ref"),
+        block_roles=(("channels", 128),),
+    ),
+    "rg_lru_bwd": KernelSpec(
+        name="rg_lru_bwd",
+        # (a, b, d_out) -> (da, db)
+        operand_roles=(_LRU, _LRU, _LRU),
+        result_roles=(_LRU, _LRU),
+        mappable=frozenset({"batch", "channels"}),
+        blocked=frozenset({"seq"}),
+        impls=("ref",),
+        dispatch_site=False,
+    ),
+}
+
+
+def kernel_name(prim: str) -> str | None:
+    """The kernel id of an IR prim, or ``None`` for non-kernel prims."""
+    if prim.startswith(KERNEL_PRIM_PREFIX):
+        return prim[len(KERNEL_PRIM_PREFIX):]
+    return None
+
+
+def spec_for_prim(prim: str) -> KernelSpec | None:
+    """Registry lookup by IR prim (``kernel:<name>``)."""
+    name = kernel_name(prim)
+    return KERNELS.get(name) if name else None
+
+
+def pallas_feasible(name: str, dims: dict) -> bool:
+    """Whether the Pallas impl of ``name`` can tile role sizes ``dims``."""
+    spec = KERNELS.get(name)
+    return spec is not None and spec.feasible("pallas", dims)

@@ -62,7 +62,10 @@ def run_worker_job(job: dict) -> dict:
             ShardingPlan.as_dict(), "repeats", "warmup"}``; optional
             ``"mode": "hlo"`` stops after lower+compile and returns the
             compiled module's collective traffic
-            (``repro.launch.hlo_analysis``) instead of timing runs.
+            (``repro.launch.hlo_analysis``) instead of timing runs;
+            optional ``"use_pallas": true`` routes the model through the
+            fused kernel entry points, so the plan's ``kernel_sites``
+            decisions govern execution (docs/kernels.md).
 
     Returns:
         A JSON-friendly result dict; ``result["status"]`` is "ok",
@@ -90,6 +93,9 @@ def run_worker_job(job: dict) -> dict:
     cfg = get_config(job["arch"])
     if job.get("reduced", True):
         cfg = cfg.reduced()
+    if job.get("use_pallas"):
+        import dataclasses
+        cfg = dataclasses.replace(cfg, use_pallas=True)
     s = job["shape"]
     shape = ShapeConfig(s.get("name", "measure"), s["seq_len"],
                         s["global_batch"], s["kind"])
@@ -196,7 +202,8 @@ def _worker_env(num_devices: int) -> dict:
 
 def measure_plan(arch: str, shape, plan, *, reduced: bool = True,
                  repeats: int = 5, warmup: int = 1,
-                 timeout: float = 900.0) -> dict:
+                 timeout: float = 900.0,
+                 use_pallas: bool = False) -> dict:
     """Measure one plan in a fresh simulated-mesh subprocess.
 
     Args:
@@ -210,6 +217,9 @@ def measure_plan(arch: str, shape, plan, *, reduced: bool = True,
         repeats: timed executions (the median is reported).
         warmup: untimed executions before the timed ones.
         timeout: subprocess wall-clock budget, seconds.
+        use_pallas: route the worker's model through the fused kernel
+            entry points (the plan's ``kernel_sites`` then govern
+            per-site impls and ``shard_map`` lowering).
 
     Returns:
         The worker's result dict ("status", "measured_s", "runs_s",
@@ -219,12 +229,14 @@ def measure_plan(arch: str, shape, plan, *, reduced: bool = True,
         shape = {"name": shape.name, "seq_len": shape.seq_len,
                  "global_batch": shape.global_batch, "kind": shape.kind}
     job = {"arch": arch, "shape": shape, "reduced": reduced,
-           "plan": plan.as_dict(), "repeats": repeats, "warmup": warmup}
+           "plan": plan.as_dict(), "repeats": repeats, "warmup": warmup,
+           "use_pallas": use_pallas}
     return _run_worker_subprocess(job, plan.mesh.num_devices, timeout)
 
 
 def hlo_for_plan(arch: str, shape, plan, *, reduced: bool = True,
-                 timeout: float = 900.0) -> dict:
+                 timeout: float = 900.0,
+                 use_pallas: bool = False) -> dict:
     """Harvest a plan's compiled-HLO collective traffic in a subprocess.
 
     The conformance half of the static verifier needs the collectives
@@ -239,6 +251,8 @@ def hlo_for_plan(arch: str, shape, plan, *, reduced: bool = True,
         plan: the ``ShardingPlan`` to lower.
         reduced: run the ``reduced()`` (CPU-smoke) config.
         timeout: subprocess wall-clock budget, seconds.
+        use_pallas: route the worker's model through the fused kernel
+            entry points (see :func:`measure_plan`).
 
     Returns:
         The worker result: "status", "coll_bytes" (``{kind: bytes}``,
@@ -249,7 +263,8 @@ def hlo_for_plan(arch: str, shape, plan, *, reduced: bool = True,
         shape = {"name": shape.name, "seq_len": shape.seq_len,
                  "global_batch": shape.global_batch, "kind": shape.kind}
     job = {"arch": arch, "shape": shape, "reduced": reduced,
-           "plan": plan.as_dict(), "mode": "hlo"}
+           "plan": plan.as_dict(), "mode": "hlo",
+           "use_pallas": use_pallas}
     return _run_worker_subprocess(job, plan.mesh.num_devices, timeout)
 
 

@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import ops as kernel_ops
 from repro.models.sharding import constrain
 
 # ---------------------------------------------------------------------------
@@ -151,6 +152,18 @@ def attn_apply(cfg, p, x, positions, *, window=0, is_causal=True,
         mask = None
     else:
         q, k, v = _project_qkv(cfg, p, h, h, positions, positions)
+        if getattr(cfg, "use_pallas", False) and window == 0:
+            # fused kernel path: expand GQA groups so the fused op's
+            # head dim is shared across q/k/v (mappable by the plan),
+            # then dispatch through kernels.ops — traced as a single
+            # kernel:flash_attention IR op
+            g = cfg.num_heads // cfg.num_kv_heads
+            kf = jnp.repeat(k, g, axis=2) if g > 1 else k
+            vf = jnp.repeat(v, g, axis=2) if g > 1 else v
+            out = kernel_ops.attention(q, kf, vf, causal=is_causal)
+            out = out.reshape(*out.shape[:2], -1)
+            out = constrain(out, ("act_batch", "seq", "heads"))
+            return x + (out @ p["wo"])
         S = x.shape[1]
         mask = causal_mask(S, S, 0, window) if is_causal else None
     out = attn_core(cfg, q, k, v, mask)
@@ -414,12 +427,16 @@ def rglru_apply(cfg, p, x):
     u = constrain(u, ("act_batch", "seq", "rnn"))
     a, bterm = _rglru_gates(p, u)
 
-    def combine(c1, c2):
-        a1, b1 = c1
-        a2, b2 = c2
-        return a1 * a2, a2 * b1 + b2
+    if getattr(cfg, "use_pallas", False):
+        # fused kernel path — traced as a single kernel:rg_lru IR op
+        hseq = kernel_ops.rg_lru(a, bterm)
+    else:
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, a2 * b1 + b2
 
-    _, hseq = jax.lax.associative_scan(combine, (a, bterm), axis=1)
+        _, hseq = jax.lax.associative_scan(combine, (a, bterm), axis=1)
     y = jax.nn.gelu(h @ p["wy"]) * hseq.astype(x.dtype)
     return x + (y @ p["wo"])
 

@@ -15,7 +15,9 @@ This is the JAX-idiomatic materialisation of the paper's flow: TOAST picks
 from __future__ import annotations
 
 import contextlib
+import dataclasses
 import threading
+from typing import Any
 
 import jax
 from jax.sharding import PartitionSpec
@@ -71,6 +73,82 @@ def constrain(x: jax.Array, names: tuple[str | None, ...]) -> jax.Array:
         return jax.lax.with_sharding_constraint(x, spec)
     except (ValueError, TypeError, RuntimeError):
         return x
+
+
+# ---------------------------------------------------------------------------
+# kernel dispatch: per-site impl registry for the fused Pallas kernels
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class KernelDispatch:
+    """Ambient per-trace kernel-dispatch state (``kernels.ops`` reads it).
+
+    Sites are keyed ``"<kernel>:<ordinal>"`` in call-occurrence order
+    per kernel kind — the same order the fused ops appear in the traced
+    IR, because the model code runs identically at trace and execution
+    time.  ``plan.apply`` installs one of these carrying the searched
+    plan's per-site impl decisions and (for sharded sites) the
+    ``shard_map`` partition specs.
+
+    Attributes:
+        impls: site key -> impl name ("pallas" | "ref").
+        default_impl: impl for sites without an explicit entry
+            (``None`` = backend auto-detection in ``kernels.ops``).
+        interpret: Pallas interpret-mode override (``None`` = auto).
+        mesh: concrete ``jax.sharding.Mesh`` for ``shard_map`` lowering.
+        specs: site key -> (in_specs tuple, out_specs) PartitionSpecs.
+    """
+
+    impls: dict = dataclasses.field(default_factory=dict)
+    default_impl: str | None = None
+    interpret: bool | None = None
+    mesh: Any = None
+    specs: dict = dataclasses.field(default_factory=dict)
+    _counters: dict = dataclasses.field(default_factory=dict)
+
+    def next_site(self, kernel: str) -> str:
+        """Allocate the next site key for one ``kernel`` call."""
+        n = self._counters.get(kernel, 0)
+        self._counters[kernel] = n + 1
+        return f"{kernel}:{n}"
+
+    def reset(self) -> None:
+        """Reset the per-trace ordinal counters."""
+        self._counters.clear()
+
+    def impl_for(self, site: str) -> str | None:
+        """The impl decision for ``site`` (falls back to the default)."""
+        return self.impls.get(site, self.default_impl)
+
+    def specs_for(self, site: str):
+        """``(mesh, in_specs, out_specs)`` for a sharded site, or None."""
+        spec = self.specs.get(site)
+        if spec is None or self.mesh is None:
+            return None
+        return (self.mesh, *spec)
+
+
+def get_kernel_dispatch() -> KernelDispatch | None:
+    """The thread's active :class:`KernelDispatch`, or ``None``."""
+    return getattr(_STATE, "kernel_dispatch", None)
+
+
+@contextlib.contextmanager
+def kernel_dispatch(disp: KernelDispatch | None):
+    """Install ``disp`` as the ambient dispatch for this thread.
+
+    Entering resets the site ordinal counters, so one context spans
+    exactly one trace of the model function.
+    """
+    prev = get_kernel_dispatch()
+    if disp is not None:
+        disp.reset()
+    _STATE.kernel_dispatch = disp
+    try:
+        yield disp
+    finally:
+        _STATE.kernel_dispatch = prev
 
 
 # Expert/manual baseline rules (paper §5.1.1): FSDP + Megatron + sequence

@@ -34,6 +34,11 @@ DOC_GATED_FILES = [
     "src/repro/guidance/spec.py",
     "src/repro/guidance/evaluate.py",
     "src/repro/launch/guide.py",
+    "src/repro/kernels/registry.py",
+    "src/repro/kernels/ops.py",
+    "src/repro/kernels/flash_attention.py",
+    "src/repro/kernels/rg_lru.py",
+    "src/repro/kernels/ref.py",
 ]
 
 RULES = "D101,D102,D103,D417"

@@ -92,8 +92,10 @@ def test_collective_mismatch_fires_with_op_attribution(cm, plan,
                                                        monkeypatch):
     orig = cm.recost
 
-    def tampered(op_indices, vids, color_axes, suppressed):
-        rows, vbytes = orig(op_indices, vids, color_axes, suppressed)
+    def tampered(op_indices, vids, color_axes, suppressed,
+                 kernel_impls=None):
+        rows, vbytes = orig(op_indices, vids, color_axes, suppressed,
+                            kernel_impls)
         k = min(rows)
         row = list(rows[k])
         row[4] += 12345.0           # comm bytes the derivation can't see
